@@ -1,0 +1,26 @@
+"""Appendix B.3 analog: sweep the slow learning rate alpha and slow momentum
+beta.  Paper claims: alpha=1 is uniformly best; for fixed alpha there is a
+best beta in [0.4, 0.8]."""
+from __future__ import annotations
+
+from . import common
+
+# (alpha, beta) grid: full beta sweep at alpha=1 + one alpha=0.5 point
+GRID = [(1.0, 0.0), (1.0, 0.3), (1.0, 0.6), (1.0, 0.8), (0.5, 0.6)]
+
+
+def main():
+    print("# App B.3 analog: alpha x beta sweep (sgp base, tau=12)")
+    import dataclasses
+
+    print("alpha,beta,final_train_loss,eval_loss")
+    for alpha, beta in GRID:
+        cfg = dataclasses.replace(common.preset_cfg("sgp+slowmo", beta=beta), alpha=alpha)
+        r = common.run_algorithm(
+            f"sgp+slowmo_a{alpha}_b{beta}", cfg, cache_key=f"b3_a{alpha}_b{beta}"
+        )
+        print(f"{alpha},{beta},{r.final_loss:.4f},{r.eval_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Appendix B.4 analog: base-optimizer buffer strategies at the outer
+boundary (reset / maintain / average).
+
+Paper claims: for SGD the three strategies are comparable (reset is fine and
+cheapest); for Adam, reset is clearly WORSE (second-moment warmup is lost)
+while maintain ~= average."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.base_opt import InnerOptConfig
+
+from . import common
+
+STRATEGIES = ["reset", "maintain", "average"]
+
+
+def main():
+    print("# App B.4 analog: buffer strategies (local base, tau=12, slowmo beta=0.6)")
+    print("inner_opt,strategy,final_train_loss,eval_loss")
+    for kind, lr in [("sgd", common.DEFAULT_LR), ("adam", 0.003)]:
+        for strat in STRATEGIES:
+            inner = InnerOptConfig(kind=kind, momentum=0.9, nesterov=True)
+            cfg = dataclasses.replace(
+                common.preset_cfg("local_sgd+slowmo"),
+                inner=inner,
+                buffer_strategy=strat,
+            )
+            r = common.run_algorithm(
+                f"b4_{kind}_{strat}", cfg, lr=lr, cache_key=f"b4_{kind}_{strat}"
+            )
+            print(f"{kind},{strat},{r.final_loss:.4f},{r.eval_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

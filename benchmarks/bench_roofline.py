@@ -1,0 +1,69 @@
+"""Roofline report: aggregate the dry-run artifacts into the per-(arch x
+shape) three-term roofline table (§Roofline of EXPERIMENTS.md).
+
+Reads artifacts/dryrun_single (unrolled, roofline-grade) falling back to
+artifacts/dryrun_single_rolled, and the multi-pod coherence pass."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIRS = [
+    "artifacts/dryrun_single",
+    "artifacts/dryrun_single_rolled",
+]
+MULTI_DIR = "artifacts/dryrun_multi"
+
+
+def load_records(dirs=None):
+    recs = {}
+    for d in dirs or ART_DIRS:
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(f) as fh:
+                r = json.load(fh)
+            key = (r["arch"], r["shape"])
+            # prefer unrolled records
+            if key in recs and recs[key].get("unrolled") and not r.get("unrolled"):
+                continue
+            if key not in recs or (r.get("unrolled") and not recs[key].get("unrolled")):
+                recs[key] = r
+    return recs
+
+
+def fmt_s(x):
+    return f"{x:.3e}"
+
+
+def main():
+    recs = load_records()
+    print("# Roofline table (single-pod 16x16; per-device terms; v5e model)")
+    print(
+        "arch,shape,status,unrolled,compute_s,memory_s,collective_s,dominant,"
+        "params_active,useful_flops_ratio,temp_bytes_per_dev,compile_s"
+    )
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skip":
+            print(f"{arch},{shape},skip({r['reason'][:40]}),,,,,,,,,")
+            continue
+        if r["status"] != "ok":
+            print(f"{arch},{shape},ERROR,,,,,,,,,")
+            continue
+        ro = r["roofline"]
+        print(
+            f"{arch},{shape},ok,{r.get('unrolled')},{fmt_s(ro['compute_s'])},"
+            f"{fmt_s(ro['memory_s'])},{fmt_s(ro['collective_s'])},{ro['dominant']},"
+            f"{r['params_active']},{r.get('useful_flops_ratio', 0):.3f},"
+            f"{r.get('memory', {}).get('temp_size_in_bytes', 0)},"
+            f"{r.get('compile_s', 0):.1f}"
+        )
+
+    multi = load_records([MULTI_DIR])
+    n_ok = sum(r["status"] == "ok" for r in multi.values())
+    n_skip = sum(r["status"] == "skip" for r in multi.values())
+    print(f"# multi-pod (2x16x16) coherence pass: {n_ok} ok / {n_skip} skip / "
+          f"{len(multi) - n_ok - n_skip} other")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Table 2 analog: average time per inner iteration, with and without SlowMo,
+plus the analytic per-step communication volume (bytes/worker/step) on which
+the paper's wall-clock claims rest.
+
+Paper claim: the SlowMo averaging cost is amortized over tau iterations, so
+time/iter with SlowMo ~= without; Local SGD variants add NO communication at
+all.  On CPU we measure the compute-side us/step and report the comm model
+separately (the container has no interconnect to time)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import param_count
+
+from . import common
+
+ALGOS = ["local_sgd", "local_sgd+slowmo", "sgp", "sgp+slowmo",
+         "sgp+slowmo-noaverage", "double_averaging", "ar_sgd"]
+
+_COMM_KEY = {
+    "local_sgd": "local",
+    "local_sgd+slowmo": "local+slowmo",
+    "sgp": "sgp",
+    "sgp+slowmo": "sgp+slowmo",
+    "sgp+slowmo-noaverage": "sgp+slowmo-noaverage",
+    "double_averaging": "double_averaging",
+    "ar_sgd": "ar",
+}
+
+
+def main():
+    model = common.bench_model()
+    n = param_count(model.init(jax.random.PRNGKey(0)))
+    print("# Table 2 analog: us/inner-step (measured, CPU) + comm bytes/step (model)")
+    print("algorithm,us_per_step,comm_bytes_per_step,comm_rel_to_allreduce")
+    ar_bytes = common.comm_bytes_per_step("ar", n, 1)
+    for name in ALGOS:
+        tau = 1 if name == "ar_sgd" else 12
+        r = common.run_algorithm(name, common.preset_cfg(name, tau=tau))
+        cb = common.comm_bytes_per_step(_COMM_KEY[name], n, tau)
+        print(f"{name},{r.us_per_inner_step:.1f},{cb:.0f},{cb / ar_bytes:.3f}")
+
+
+if __name__ == "__main__":
+    main()

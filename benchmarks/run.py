@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure + the roofline report.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+Prints CSV sections; results are cached under artifacts/bench/."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title, fn):
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}", flush=True)
+    t0 = time.perf_counter()
+    try:
+        fn()
+    except Exception as e:  # noqa: BLE001
+        print(f"SECTION FAILED: {type(e).__name__}: {e}")
+    print(f"[section time: {time.perf_counter() - t0:.1f}s]", flush=True)
+
+
+def main() -> None:
+    from . import (
+        bench_b3_alphabeta,
+        bench_b4_buffers,
+        bench_fig3_tau,
+        bench_roofline,
+        bench_sec6_noaverage,
+        bench_table1,
+        bench_table2,
+    )
+
+    fast = "--fast" in sys.argv
+    _section("Table 1: base algorithms with/without SlowMo", bench_table1.main)
+    _section("Table 2: time per iteration + communication model", bench_table2.main)
+    if not fast:
+        _section("Figure 3: effect of tau", bench_fig3_tau.main)
+        _section("Appendix B.3: alpha/beta sweep", bench_b3_alphabeta.main)
+        _section("Appendix B.4: buffer strategies", bench_b4_buffers.main)
+    _section("Section 6: SlowMo-noaverage", bench_sec6_noaverage.main)
+    _section("Roofline (dry-run artifacts)", bench_roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Compare the paper's baselines side by side (Figure 2 analog).
+
+Runs Local SGD / SGP / AR-SGD each with and without SlowMo on the same data
+stream and prints a per-round loss CSV you can plot.
+
+    PYTHONPATH=src python examples/compare_baselines.py --rounds 25
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core import slowmo
+from repro.data import MarkovLMConfig, make_markov_sampler
+from repro.models import build_model
+
+ALGOS = ["local_sgd", "local_sgd+slowmo", "sgp", "sgp+slowmo", "ar_sgd"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=12)
+    ap.add_argument("--lr", type=float, default=0.25)
+    args = ap.parse_args()
+
+    cfg = get_config("olmo-1b", reduced=True).replace(vocab_size=64, d_model=128, d_ff=256)
+    model = build_model(cfg)
+    data = MarkovLMConfig(vocab_size=64, temperature=0.7)
+    sampler = make_markov_sampler(data, args.workers)
+
+    histories = {}
+    for name in ALGOS:
+        tau = 1 if name.startswith("ar") else args.tau
+        smcfg = slowmo.preset(name, num_workers=args.workers, tau=tau, beta=0.6)
+        round_fn = jax.jit(slowmo.make_slowmo_round(smcfg, model.loss_fn))
+        state = slowmo.init_slowmo(smcfg, model.init(jax.random.PRNGKey(0)))
+        hist = []
+        inner_budget = args.rounds * args.tau
+        for r in range(inner_budget // tau):
+            batch = {"tokens": sampler(r, tau, 4, 64)}
+            state, m = round_fn(state, batch, args.lr)
+            hist.append(float(m["loss"]))
+        histories[name] = hist
+        print(f"# {name:22s} final={hist[-1]:.4f}", flush=True)
+
+    print("\ninner_step," + ",".join(ALGOS))
+    max_len = max(len(h) for h in histories.values())
+    for i in range(max_len):
+        row = [str((i + 1) * args.tau)]
+        for name in ALGOS:
+            h = histories[name]
+            idx = min(int(i * len(h) / max_len), len(h) - 1)
+            row.append(f"{h[idx]:.4f}")
+        print(",".join(row))
+
+
+if __name__ == "__main__":
+    main()

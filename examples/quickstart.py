@@ -1,0 +1,43 @@
+"""Quickstart: SlowMo in ~40 lines.
+
+Trains a small transformer LM on a synthetic Markov corpus with 8 simulated
+workers running Local SGD, wrapped by SlowMo (i.e. BMUF).  Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.core import slowmo
+from repro.data import MarkovLMConfig, chain_entropy, make_markov_sampler
+from repro.models import build_model
+from repro.train import TrainConfig, Trainer
+
+WORKERS = 8
+VOCAB = 64
+
+
+def main():
+    # 1. a model (any repro.models config works; this is a tiny dense LM)
+    cfg = get_config("olmo-1b", reduced=True).replace(vocab_size=VOCAB)
+    model = build_model(cfg)
+
+    # 2. a SlowMo algorithm instance: Local SGD base + slow momentum (= BMUF)
+    smcfg = slowmo.preset("local_sgd+slowmo", num_workers=WORKERS, tau=12, beta=0.6)
+
+    # 3. data: learnable synthetic Markov-chain LM task
+    data = MarkovLMConfig(vocab_size=VOCAB, temperature=0.7)
+    sampler = make_markov_sampler(data, WORKERS)
+
+    # 4. train
+    tc = TrainConfig(total_rounds=30, per_worker_batch=4, seq_len=64, lr=0.08, log_every=5)
+    trainer = Trainer(model, smcfg, tc, sampler)
+    state = trainer.run()
+
+    print(f"\nfinal loss {trainer.history[-1]['loss']:.4f} "
+          f"(task entropy floor {chain_entropy(data):.4f} nats)")
+    print(f"outer iterations: {int(state.outer_step)}, inner steps: {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end training driver: train a language model with SlowMo.
+
+Presets:
+    10m  (default) — ~10M-param model, a few hundred inner steps on CPU
+    100m           — ~100M-param model (the deliverable config; heavy on CPU)
+
+    PYTHONPATH=src python examples/train_lm.py --preset 10m --rounds 25
+    PYTHONPATH=src python examples/train_lm.py --algo sgp+slowmo --rounds 25
+
+Demonstrates: config system -> model zoo -> SlowMo optimizer -> trainer with
+LR schedule + checkpointing -> held-out eval -> decode sanity generation.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import slowmo
+from repro.data import MarkovLMConfig, chain_entropy, make_markov_sampler
+from repro.models import build_model, param_count
+from repro.serve import DecodeEngine, ServeConfig
+from repro.train import TrainConfig, Trainer, checkpoint
+
+PRESETS = {
+    # ~10M params: quick CPU run
+    "10m": dict(n_layers=4, d_model=384, d_ff=1024, n_heads=6, n_kv_heads=6, vocab_size=512),
+    # ~100M params: the 'train ~100M for a few hundred steps' deliverable
+    "100m": dict(n_layers=12, d_model=768, d_ff=2048, n_heads=12, n_kv_heads=12, vocab_size=8192),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=list(PRESETS))
+    ap.add_argument("--algo", default="local_sgd+slowmo",
+                    help="any repro.core.slowmo preset name")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=12)
+    ap.add_argument("--beta", type=float, default=0.6)
+    ap.add_argument("--rounds", type=int, default=25)  # 25*12 = 300 inner steps
+    ap.add_argument("--lr", type=float, default=0.08)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="artifacts/ckpt/train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config("olmo-1b", reduced=True).replace(**PRESETS[args.preset])
+    model = build_model(cfg)
+    n = param_count(model.init(jax.random.PRNGKey(0)))
+    print(f"model: {n/1e6:.1f}M params | algo: {args.algo} | workers {args.workers} tau {args.tau}")
+
+    data = MarkovLMConfig(vocab_size=cfg.vocab_size, temperature=0.8)
+    sampler = make_markov_sampler(data, args.workers)
+    smcfg = slowmo.preset(args.algo, num_workers=args.workers, tau=args.tau, beta=args.beta)
+
+    def eval_fn(params):
+        params = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        batch = {"tokens": sampler(999_999, 1, 32, args.seq)[0, 0]}
+        return jax.jit(model.loss_fn)(params, batch)
+
+    tc = TrainConfig(
+        total_rounds=args.rounds, per_worker_batch=args.batch, seq_len=args.seq,
+        lr=args.lr, schedule="warmup_step", warmup_steps=3,
+        decay_rounds=(int(args.rounds * 0.6), int(args.rounds * 0.85)),
+        log_every=5, ckpt_every=10, ckpt_path=args.ckpt,
+    )
+    trainer = Trainer(model, smcfg, tc, sampler, eval_fn=eval_fn)
+    state = trainer.run()
+
+    print(f"\ntask entropy floor: {chain_entropy(data):.4f} nats")
+    print(f"checkpoint saved: {checkpoint.exists(args.ckpt)}")
+
+    # decode sanity: generate a few tokens from the trained model
+    params32 = jax.tree.map(lambda x: x.astype(jnp.float32), state.outer_params)
+    engine = DecodeEngine(model, params32, ServeConfig(max_len=64, temperature=1.0))
+    gen, stats = engine.generate(jnp.ones((2, 4), jnp.int32), 16)
+    print(f"generated {gen.shape} tokens at {stats['tokens_per_s']:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

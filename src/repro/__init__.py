@@ -1,0 +1,2 @@
+"""repro: production-grade JAX reproduction of SlowMo (ICLR 2020)."""
+__version__ = "0.1.0"

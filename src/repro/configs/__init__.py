@@ -1,0 +1,2 @@
+"""Architecture configs (one module per assigned architecture)."""
+from .base import ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig, all_configs, get_config

@@ -1,0 +1,18 @@
+"""chameleon-34b — early-fusion VLM: images as VQ tokens in a fused vocab.
+[arXiv:2405.09818]  48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536,
+qk-norm.  The VQ image tokenizer is STUBBED — input_specs() supplies fused
+token ids; the backbone is a standard decoder LM over the fused stream."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="dense", modality="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab_size=65536, qk_norm=True,
+    dtype=jnp.bfloat16, remat=True, source="arXiv:2405.09818",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False,
+)

@@ -1,0 +1,20 @@
+"""hubert-xlarge — encoder-only audio backbone (same arch as wav2vec2).
+[arXiv:2106.07447]  48L d_model=1280 16H (MHA) d_ff=5120 vocab=504 (cluster
+codebook).  Conv feature frontend is STUBBED: the batch supplies 512-dim
+frame features; training objective is masked cluster prediction.
+No decode shapes (encoder-only)."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="dense", modality="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504, act="gelu", causal=False,
+    frontend_dim=512, dtype=jnp.bfloat16, remat=True,
+    source="arXiv:2106.07447",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+    vocab_size=64, frontend_dim=32, dtype=jnp.float32, remat=False,
+)

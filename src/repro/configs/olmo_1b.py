@@ -1,0 +1,17 @@
+"""olmo-1b — dense, non-parametric LayerNorm. [arXiv:2402.00838]
+16L d_model=2048 16H (MHA) d_ff=8192 vocab=50304, tied embeddings."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b", family="dense",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=50304, norm_type="nonparam_ln",
+    tie_embeddings=True, dtype=jnp.bfloat16, remat=True,
+    source="arXiv:2402.00838",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, d_ff=512,
+    vocab_size=512, dtype=jnp.float32, remat=False,
+)

@@ -1,0 +1,16 @@
+"""qwen2-7b — dense, GQA, QKV bias. [arXiv:2407.10671]
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064, head_dim=128."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b", family="dense",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064, qkv_bias=True, rope_theta=1_000_000.0,
+    dtype=jnp.bfloat16, remat=True, source="arXiv:2407.10671",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False,
+)

@@ -1,0 +1,16 @@
+"""qwen3-8b — dense, qk-norm, GQA. [hf:Qwen/Qwen3-8B]
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936, head_dim=128."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=12288, vocab_size=151936, qk_norm=True, rope_theta=1_000_000.0,
+    dtype=jnp.bfloat16, remat=True, source="hf:Qwen/Qwen3-8B",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=512, vocab_size=512, dtype=jnp.float32, remat=False,
+)

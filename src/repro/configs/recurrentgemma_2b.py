@@ -1,0 +1,21 @@
+"""recurrentgemma-2b — RG-LRU + local attention, 1:2 (attn:rec).
+[arXiv:2402.19427]  26L d_model=2560 10H (MQA kv=1, head_dim=256)
+d_ff=7680 vocab=256000, window=2048, lru_width=2560.
+Pattern (rec, rec, attn) x 8 + 2 trailing rec layers.
+Sub-quadratic => long_500k runs."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="rglru",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size=256000, window=2048, lru_width=2560,
+    pattern=("rec", "rec", "attn"), conv_width=4, tie_embeddings=True,
+    dtype=jnp.bfloat16, remat=True, source="arXiv:2402.19427",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=2, n_kv_heads=1, head_dim=64,
+    d_ff=256, vocab_size=256, window=32, lru_width=128,
+    pattern=("rec", "attn"), dtype=jnp.float32, remat=False,
+)

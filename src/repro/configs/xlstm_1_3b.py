@@ -1,0 +1,19 @@
+"""xlstm-1.3b — sLSTM + mLSTM blocks. [arXiv:2405.04517]
+48 blocks d_model=2048 4 heads, vocab=50304, d_ff=0 (pre-up-projection
+blocks, proj factor 2).  1 of every 8 blocks is sLSTM (7:1 mLSTM:sLSTM).
+Sub-quadratic: chunkwise mLSTM + recurrent sLSTM => long_500k runs."""
+import jax.numpy as jnp
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="xlstm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304, slstm_every=8, proj_factor=2.0,
+    chunk_size=256, dtype=jnp.bfloat16, remat=True,
+    source="arXiv:2405.04517",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=128, n_heads=2, n_kv_heads=2, vocab_size=256,
+    slstm_every=2, chunk_size=16, dtype=jnp.float32, remat=False,
+)

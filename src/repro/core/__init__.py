@@ -1,0 +1,12 @@
+"""SlowMo core: the paper's contribution as a composable JAX module."""
+from .base_opt import InnerOptConfig, InnerOptState, init_inner_state, update_direction
+from .gossip import GossipConfig, GossipState
+from .slowmo import (
+    SlowMoConfig,
+    SlowMoState,
+    init_slowmo,
+    make_inner_step,
+    make_slowmo_round,
+    outer_update,
+    preset,
+)

@@ -1,0 +1,151 @@
+"""Inner ("base") optimizers for the SlowMo framework.
+
+Implements the update directions of Table C.1 of the paper:
+
+* SGD with Nesterov momentum:
+    h_{k+1} = beta_local * h_k + g_k
+    d_k     = beta_local * h_{k+1} + g_k
+* Adam (with bias correction; the correction step index ``l`` follows the
+  buffer strategy: ``l = k`` when buffers are reset at each outer boundary,
+  ``l = t*tau + k`` when they are maintained — we simply carry the counter in
+  the state and the boundary handler resets it or not).
+
+All functions are pure and operate on parameter pytrees whose leaves carry a
+leading worker axis ``W`` (the update is elementwise, so no vmap is needed).
+The momentum/second-moment buffers mirror the parameter pytree (leading ``W``
+included); the Adam step counter is a scalar (shared by all workers — workers
+always take the same number of steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class InnerOptConfig:
+    """Configuration of the base optimizer's local update rule."""
+
+    kind: str = "sgd"  # 'sgd' | 'adam'
+    # SGD options (paper: Nesterov momentum 0.9, weight decay 1e-4)
+    momentum: float = 0.9
+    nesterov: bool = True
+    weight_decay: float = 0.0
+    # Adam options (paper WMT: beta1=0.9, beta2=0.98, eps=1e-8)
+    beta1: float = 0.9
+    beta2: float = 0.98
+    eps: float = 1e-8
+    clip_norm: float = 0.0  # global-norm gradient clipping (0 = off)
+
+    def __post_init__(self):
+        if self.kind not in ("sgd", "adam"):
+            raise ValueError(f"unknown inner optimizer kind: {self.kind!r}")
+
+
+class InnerOptState(NamedTuple):
+    """Buffers of the base optimizer (pytrees mirroring params)."""
+
+    h: PyTree  # first moment / momentum buffer
+    v: PyTree  # second moment (Adam only; zeros-like placeholder for SGD)
+    count: jnp.ndarray  # scalar int32 step counter (for Adam bias correction)
+
+
+def _zeros_like_f32(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def init_inner_state(cfg: InnerOptConfig, params: PyTree) -> InnerOptState:
+    h = _zeros_like_f32(params)
+    if cfg.kind == "adam":
+        v = _zeros_like_f32(params)
+    else:
+        # SGD: keep an (empty-cost) placeholder so the pytree structure is
+        # static across optimizer kinds.
+        v = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), params)
+    return InnerOptState(h=h, v=v, count=jnp.zeros((), jnp.int32))
+
+
+def update_direction(
+    cfg: InnerOptConfig,
+    state: InnerOptState,
+    params: PyTree,
+    grads: PyTree,
+) -> tuple[PyTree, InnerOptState]:
+    """Return the update direction ``d`` (Table C.1) and the new state.
+
+    The caller applies ``x <- x - lr * d``.  Gradients and buffers are
+    accumulated in fp32 regardless of the parameter dtype.
+    """
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm:
+        # per-worker global-norm clip: norms computed over the non-worker dims
+        # of every leaf jointly (axis 0 is the worker axis)
+        sq = sum(
+            jnp.sum(jnp.square(g), axis=tuple(range(1, g.ndim)))
+            for g in jax.tree.leaves(grads)
+        )  # (W,)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(jnp.sqrt(sq), 1e-9))
+        grads = jax.tree.map(
+            lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), grads
+        )
+    if cfg.weight_decay:
+        grads = jax.tree.map(
+            lambda g, p: g + cfg.weight_decay * p.astype(jnp.float32),
+            grads,
+            params,
+        )
+    if cfg.kind == "sgd":
+        h_new = jax.tree.map(lambda h, g: cfg.momentum * h + g, state.h, grads)
+        if cfg.nesterov:
+            d = jax.tree.map(lambda h, g: cfg.momentum * h + g, h_new, grads)
+        else:
+            d = h_new
+        return d, InnerOptState(h=h_new, v=state.v, count=state.count + 1)
+
+    # Adam
+    count = state.count + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    h_new = jax.tree.map(lambda h, g: b1 * h + (1.0 - b1) * g, state.h, grads)
+    v_new = jax.tree.map(
+        lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g), state.v, grads
+    )
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    d = jax.tree.map(
+        lambda h, v: (h / c1) / (jnp.sqrt(v / c2) + cfg.eps), h_new, v_new
+    )
+    return d, InnerOptState(h=h_new, v=v_new, count=count)
+
+
+def reset_buffers(cfg: InnerOptConfig, state: InnerOptState) -> InnerOptState:
+    """Buffer strategy 'reset' (App. B.4): zero all buffers and the counter."""
+    return InnerOptState(
+        h=_zeros_like_f32(state.h),
+        v=jax.tree.map(jnp.zeros_like, state.v),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def average_buffers(state: InnerOptState, worker_axis: int = 0) -> InnerOptState:
+    """Buffer strategy 'average': ALLREDUCE the buffers across workers.
+
+    The buffers carry a leading worker axis; averaging over it lowers to an
+    all-reduce on the mesh axes that shard the worker axis.
+    """
+
+    def avg(x):
+        if x.ndim == 0:
+            return x
+        m = jnp.mean(x, axis=worker_axis, keepdims=True)
+        return jnp.broadcast_to(m, x.shape)
+
+    return InnerOptState(
+        h=jax.tree.map(avg, state.h),
+        v=jax.tree.map(avg, state.v),
+        count=state.count,
+    )

@@ -1,0 +1,135 @@
+"""Decentralized gossip base algorithms (SGP / OSGP / D-PSGD) on the worker axis.
+
+The worker axis is a leading array axis (sharded over the mesh's data/pod
+axes).  Static rolls along it lower to ``collective-permute``.  Since the hop
+distance of the time-varying exponential graph depends on the (traced) step
+index, we branch over the small, static set of hop phases with ``lax.switch``
+so that each branch contains a *static* roll.
+
+SGP uses push-sum: workers track a scalar de-bias weight ``w`` and evaluate
+gradients at ``z = x / w``.  For the regular one-peer-per-step exponential
+graph the in/out degrees are equal so ``w`` stays 1, but we carry the general
+machinery for fidelity (and for irregular topologies).
+
+OSGP (asynchronous in the paper) is adapted to the bulk-synchronous TPU
+programming model as *one-round-delayed* gossip: the message a worker mixes in
+at step k is the one its peer sent at step k-1.  True asynchrony has no SPMD
+analogue; staleness is the transferable part (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import topology
+
+PyTree = Any
+
+
+class GossipState(NamedTuple):
+    w: jnp.ndarray  # (W,) push-sum weights
+    stale: PyTree  # previous outgoing message (OSGP); zeros-like otherwise
+    stale_w: jnp.ndarray  # (W,) previous outgoing weights (OSGP)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    kind: str  # 'none' | 'sgp' | 'osgp' | 'dpsgd'
+    num_workers: int
+
+    def __post_init__(self):
+        if self.kind not in ("none", "sgp", "osgp", "dpsgd"):
+            raise ValueError(f"unknown gossip kind: {self.kind!r}")
+
+
+def init_gossip_state(cfg: GossipConfig, params: PyTree) -> GossipState:
+    W = cfg.num_workers
+    w = jnp.ones((W,), jnp.float32)
+    if cfg.kind == "osgp":
+        stale = jax.tree.map(lambda x: 0.5 * x.astype(jnp.float32), params)
+        stale_w = 0.5 * w
+    else:
+        stale = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), params)
+        stale_w = jnp.zeros((), jnp.float32)
+    return GossipState(w=w, stale=stale, stale_w=stale_w)
+
+
+def _wexpand(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast the (W,) weight vector against a (W, ...) leaf."""
+    return w.reshape(w.shape + (1,) * (x.ndim - 1))
+
+
+def debias(x: PyTree, w: jnp.ndarray) -> PyTree:
+    """Push-sum de-bias: z = x / w."""
+    return jax.tree.map(lambda a: a / _wexpand(w, a).astype(a.dtype), x)
+
+
+def _switch_roll(tree_and_w, hops: list[int]):
+    """Return a fn(step) that rolls (tree, w) by hops[step % len(hops)]."""
+
+    tree, w = tree_and_w
+
+    def make_branch(h):
+        def branch(_):
+            return (
+                topology.roll_workers(tree, h),
+                jnp.roll(w, h),
+            )
+
+        return branch
+
+    branches = [make_branch(h) for h in hops]
+
+    def apply(step):
+        if len(branches) == 1:
+            return branches[0](None)
+        return jax.lax.switch(step % len(branches), branches, None)
+
+    return apply
+
+
+def mix(
+    cfg: GossipConfig,
+    state: GossipState,
+    params: PyTree,
+    step: jnp.ndarray,
+) -> tuple[PyTree, GossipState]:
+    """One gossip round: mix parameter copies along the worker axis.
+
+    ``params`` leaves have leading worker axis W.  Returns mixed params and
+    the updated gossip state.
+    """
+    W = cfg.num_workers
+    if cfg.kind == "none" or W == 1:
+        return params, state
+
+    if cfg.kind == "dpsgd":
+        # Symmetric ring, doubly stochastic: x' = (x + x_prev + x_next) / 3.
+        def ring(x):
+            return (x + jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0)) / 3.0
+
+        return jax.tree.map(ring, params), state
+
+    hops = topology.exponential_hops(W)
+
+    if cfg.kind == "sgp":
+        # Keep half, receive the half pushed by the peer `hop` behind.
+        half = jax.tree.map(lambda x: 0.5 * x, params)
+        half_w = 0.5 * state.w
+        rolled, rolled_w = _switch_roll((half, half_w), hops)(step)
+        mixed = jax.tree.map(lambda a, b: a + b.astype(a.dtype), half, rolled)
+        new_w = half_w + rolled_w
+        return mixed, GossipState(w=new_w, stale=state.stale, stale_w=state.stale_w)
+
+    # osgp: mix in the *stale* message (sent by the peer one round ago).
+    half = jax.tree.map(lambda x: (0.5 * x).astype(jnp.float32), params)
+    half_w = 0.5 * state.w
+    rolled, rolled_w = _switch_roll((state.stale, state.stale_w), hops)(step)
+    mixed = jax.tree.map(
+        lambda p, a, b: (a + b).astype(p.dtype), params, half, rolled
+    )
+    new_w = half_w + rolled_w
+    return mixed, GossipState(w=new_w, stale=half, stale_w=half_w)

@@ -1,0 +1,332 @@
+"""SlowMo (Algorithm 1) — slow momentum over communication-efficient base optimizers.
+
+One jitted **round** = ``tau`` base-optimizer steps + (optional) exact average
++ slow-momentum outer update:
+
+    for k in 0..tau-1:   x^(i) <- x^(i) - gamma * d^(i)      (base optimizer)
+    x_tau = (1/m) sum_i x^(i)                                 (ALLREDUCE, line 6)
+    u <- beta * u + (x_0 - x_tau) / gamma                     (line 7)
+    x_0 <- x_0 - alpha * gamma * u                            (line 8)
+
+The m workers live on a leading array axis of every parameter leaf; on the
+production mesh that axis is sharded over the ``data`` (and ``pod``) mesh
+axes, so the exact average lowers to an all-reduce and gossip lowers to
+collective-permutes.  Recovered special cases (tested):
+
+* base='local', tau=1, alpha=1, beta>0 ........ large-batch SGD + momentum
+* base='local', tau>1, alpha=1, beta=0 ........ Local SGD
+* base='local'/Adam, tau>1, beta>0 ............ BMUF
+* W=1, beta=0, alpha in (0,1] ................. Lookahead
+* exact_average=False ......................... SGP-SlowMo-noaverage (§6)
+* beta=0, alpha=1, buffer_strategy='average' .. double-averaging (Yu et al.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import base_opt, gossip
+from .base_opt import InnerOptConfig, InnerOptState
+from .gossip import GossipConfig, GossipState
+
+PyTree = Any
+
+BASES = ("local", "sgp", "osgp", "dpsgd", "ar")
+BUFFER_STRATEGIES = ("reset", "maintain", "average")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowMoConfig:
+    """Full specification of a SlowMo algorithm instance."""
+
+    num_workers: int
+    tau: int = 12
+    alpha: float = 1.0  # slow learning rate (paper: 1.0 is uniformly best)
+    beta: float = 0.7  # slow momentum factor (paper: 0.4–0.8)
+    base: str = "local"  # base algorithm
+    inner: InnerOptConfig = dataclasses.field(default_factory=InnerOptConfig)
+    buffer_strategy: str = "reset"
+    exact_average: bool = True  # False => SlowMo-noaverage (§6)
+    param_dtype: Any = jnp.float32
+    track_drift: bool = False
+    use_pallas: bool = False  # fused Pallas outer update (interpret on CPU)
+    average_dtype: Any = None  # dtype of the exact-average all-reduce (None=f32)
+    unroll_inner: bool = False  # unroll the tau inner steps (dry-run cost analysis)
+
+    def __post_init__(self):
+        if self.base not in BASES:
+            raise ValueError(f"unknown base algorithm: {self.base!r}")
+        if self.buffer_strategy not in BUFFER_STRATEGIES:
+            raise ValueError(f"unknown buffer strategy: {self.buffer_strategy!r}")
+        if self.num_workers < 1 or self.tau < 1:
+            raise ValueError("num_workers and tau must be >= 1")
+
+    @property
+    def gossip_config(self) -> GossipConfig:
+        kind = self.base if self.base in ("sgp", "osgp", "dpsgd") else "none"
+        return GossipConfig(kind=kind, num_workers=self.num_workers)
+
+    @property
+    def slowmo_active(self) -> bool:
+        return not (self.beta == 0.0 and self.alpha == 1.0)
+
+
+class SlowMoState(NamedTuple):
+    params: PyTree  # (W, ...) worker copies, param_dtype
+    inner: InnerOptState  # base optimizer buffers, leading W
+    gossip: GossipState
+    outer_params: PyTree  # x_{t,0}, fp32; (W, ...) iff exact_average=False
+    slow_u: PyTree  # u_t, fp32; same layout as outer_params
+    step: jnp.ndarray  # global inner step counter
+    outer_step: jnp.ndarray  # t
+
+
+def _bcast_workers(tree: PyTree, W: int, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None].astype(dtype), (W,) + x.shape), tree
+    )
+
+
+def init_slowmo(cfg: SlowMoConfig, params0: PyTree) -> SlowMoState:
+    """Initialize from a single (worker-axis-free) parameter pytree."""
+    W = cfg.num_workers
+    params = _bcast_workers(params0, W, cfg.param_dtype)
+    outer = jax.tree.map(lambda x: x.astype(jnp.float32), params0)
+    if not cfg.exact_average:
+        outer = _bcast_workers(params0, W, jnp.float32)
+    u = jax.tree.map(jnp.zeros_like, outer)
+    return SlowMoState(
+        params=params,
+        inner=base_opt.init_inner_state(cfg.inner, params),
+        gossip=gossip.init_gossip_state(cfg.gossip_config, params),
+        outer_params=outer,
+        slow_u=u,
+        step=jnp.zeros((), jnp.int32),
+        outer_step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_inner_step(
+    cfg: SlowMoConfig, loss_fn: Callable[[PyTree, PyTree], jnp.ndarray]
+):
+    """Build one base-optimizer step over all W workers.
+
+    ``loss_fn(params_one_worker, batch_one_worker) -> scalar loss``.
+    Returns ``step_fn((params, inner, gossip_state, step), batch) ->
+    (carry, mean_loss)`` where batch leaves have leading worker axis W.
+    """
+    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
+    gcfg = cfg.gossip_config
+
+    def step_fn(carry, batch, lr):
+        params, inner, gstate, step = carry
+        # SGP/OSGP evaluate gradients at the de-biased iterate z = x / w.
+        if gcfg.kind in ("sgp", "osgp"):
+            z = gossip.debias(params, gstate.w)
+        else:
+            z = params
+        losses, grads = vgrad(z, batch)
+        if cfg.base == "ar":
+            # ALLREDUCE baseline: average gradients across workers every step.
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(
+                    jnp.mean(g, axis=0, keepdims=True), g.shape
+                ),
+                grads,
+            )
+        d, inner = base_opt.update_direction(cfg.inner, inner, z, grads)
+        params = jax.tree.map(
+            lambda x, dd: (x.astype(jnp.float32) - lr * dd).astype(x.dtype),
+            params,
+            d,
+        )
+        params, gstate = gossip.mix(gcfg, gstate, params, step)
+        return (params, inner, gstate, step + 1), jnp.mean(losses)
+
+    return step_fn
+
+
+def _worker_mean(tree: PyTree, dtype=None) -> PyTree:
+    """Exact average over the worker axis (lowers to all-reduce on the mesh).
+
+    ``dtype`` controls the precision OF THE COLLECTIVE (a §Perf knob: bf16
+    halves boundary traffic); the result is returned in fp32 either way."""
+    def avg(x):
+        acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+        return jnp.mean(acc, axis=0).astype(jnp.float32)
+
+    return jax.tree.map(avg, tree)
+
+
+def outer_update(cfg: SlowMoConfig, state: SlowMoState, lr) -> SlowMoState:
+    """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2)."""
+    from ..kernels import ops as kops  # local import: kernels are optional
+
+    W = cfg.num_workers
+    if cfg.exact_average:
+        # Line 6: exact average over the worker axis -> all-reduce.
+        if cfg.gossip_config.kind in ("sgp", "osgp"):
+            x_tau = _worker_mean(
+                gossip.debias(state.params, state.gossip.w), cfg.average_dtype
+            )
+        else:
+            x_tau = _worker_mean(state.params, cfg.average_dtype)
+    else:
+        # noaverage (§6): skip line 6; each worker applies the slow update
+        # to its own drift (outer state carries the worker axis).
+        if cfg.gossip_config.kind in ("sgp", "osgp"):
+            x_tau = jax.tree.map(
+                lambda x: x.astype(jnp.float32),
+                gossip.debias(state.params, state.gossip.w),
+            )
+        else:
+            x_tau = jax.tree.map(lambda x: x.astype(jnp.float32), state.params)
+
+    new_outer, new_u = kops.slowmo_outer_update(
+        state.outer_params,
+        x_tau,
+        state.slow_u,
+        gamma=lr,
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        use_pallas=cfg.use_pallas,
+    )
+
+    if cfg.exact_average:
+        new_params = _bcast_workers(new_outer, W, cfg.param_dtype)
+    else:
+        new_params = jax.tree.map(
+            lambda x: x.astype(cfg.param_dtype), new_outer
+        )
+
+    # Line 2: reset / maintain / average the base-optimizer buffers.
+    inner = state.inner
+    if cfg.buffer_strategy == "reset":
+        inner = base_opt.reset_buffers(cfg.inner, inner)
+    elif cfg.buffer_strategy == "average":
+        inner = base_opt.average_buffers(inner)
+
+    # Gossip de-bias weights restart at 1 after an exact average.
+    gstate = state.gossip
+    if cfg.exact_average and cfg.gossip_config.kind in ("sgp", "osgp"):
+        gstate = gossip.init_gossip_state(cfg.gossip_config, new_params)
+
+    return SlowMoState(
+        params=new_params,
+        inner=inner,
+        gossip=gstate,
+        outer_params=new_outer,
+        slow_u=new_u,
+        step=state.step,
+        outer_step=state.outer_step + 1,
+    )
+
+
+def make_slowmo_round(
+    cfg: SlowMoConfig, loss_fn: Callable[[PyTree, PyTree], jnp.ndarray]
+):
+    """Build the jittable round function.
+
+    ``round_fn(state, batches, lr) -> (state, metrics)`` where every leaf of
+    ``batches`` is shaped ``(tau, W, ...)`` and ``lr`` is the (fast) learning
+    rate gamma_t used for all tau steps of this round.
+    """
+    step_fn = make_inner_step(cfg, loss_fn)
+
+    def round_fn(state: SlowMoState, batches: PyTree, lr):
+        lr = jnp.asarray(lr, jnp.float32)
+
+        def body(k, acc):
+            carry, loss_sum = acc
+            batch_k = jax.tree.map(lambda x: x[k], batches)
+            carry, loss = step_fn(carry, batch_k, lr)
+            return carry, loss_sum + loss
+
+        carry0 = (state.params, state.inner, state.gossip, state.step)
+        acc0 = (carry0, jnp.zeros((), jnp.float32))
+        if cfg.unroll_inner:
+            acc = acc0
+            for k in range(cfg.tau):
+                acc = body(k, acc)
+            (params, inner, gstate, step), loss_sum = acc
+        else:
+            (params, inner, gstate, step), loss_sum = jax.lax.fori_loop(
+                0, cfg.tau, body, acc0
+            )
+        state = SlowMoState(
+            params=params,
+            inner=inner,
+            gossip=gstate,
+            outer_params=state.outer_params,
+            slow_u=state.slow_u,
+            step=step,
+            outer_step=state.outer_step,
+        )
+        metrics = {"loss": loss_sum / cfg.tau}
+        if cfg.track_drift:
+            mean_p = _worker_mean(state.params)
+            drift = sum(
+                jax.tree.leaves(
+                    jax.tree.map(
+                        lambda x, m: jnp.sum(
+                            jnp.square(x.astype(jnp.float32) - m[None])
+                        ),
+                        state.params,
+                        mean_p,
+                    )
+                )
+            )
+            metrics["drift"] = drift / cfg.num_workers
+        state = outer_update(cfg, state, lr)
+        return state, metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Named presets matching the paper's baselines (Table 1 / App. C).
+# ---------------------------------------------------------------------------
+
+def preset(
+    name: str,
+    num_workers: int,
+    tau: int = 12,
+    beta: float = 0.7,
+    inner: InnerOptConfig | None = None,
+    **kw,
+) -> SlowMoConfig:
+    """Paper baselines by name: '<base>' or '<base>+slowmo' and friends."""
+    inner = inner or InnerOptConfig()
+    adam = dataclasses.replace(inner, kind="adam")
+    table = {
+        # base algorithms (no slow momentum: beta=0, alpha=1)
+        "local_sgd": dict(base="local", beta=0.0, alpha=1.0),
+        "local_adam": dict(base="local", beta=0.0, alpha=1.0, inner=adam),
+        "sgp": dict(base="sgp", beta=0.0, alpha=1.0),
+        "osgp": dict(base="osgp", beta=0.0, alpha=1.0),
+        "dpsgd": dict(base="dpsgd", beta=0.0, alpha=1.0),
+        "ar_sgd": dict(base="ar", beta=0.0, alpha=1.0, tau=1),
+        "ar_adam": dict(base="ar", beta=0.0, alpha=1.0, tau=1, inner=adam),
+        # SlowMo on top (BMUF == local_* + slowmo)
+        "local_sgd+slowmo": dict(base="local", beta=beta),
+        "local_adam+slowmo": dict(
+            base="local", beta=beta, inner=adam, buffer_strategy="maintain"
+        ),
+        "sgp+slowmo": dict(base="sgp", beta=beta),
+        "osgp+slowmo": dict(base="osgp", beta=beta),
+        "sgp+slowmo-noaverage": dict(base="sgp", beta=beta, exact_average=False),
+        # comparisons
+        "double_averaging": dict(
+            base="local", beta=0.0, alpha=1.0, buffer_strategy="average"
+        ),
+        "lookahead": dict(base="local", beta=0.0, alpha=0.5),
+    }
+    if name not in table:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(table)}")
+    spec = dict(num_workers=num_workers, tau=tau, inner=inner)
+    spec.update(table[name])
+    spec.update(kw)
+    return SlowMoConfig(**spec)

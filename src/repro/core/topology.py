@@ -1,0 +1,82 @@
+"""Communication topologies for decentralized base algorithms.
+
+The paper's SGP experiments use the *time-varying directed exponential graph*
+(Assran et al. 2019): with workers ordered 0..m-1, at iteration k each worker
+sends to the single peer ``2^(k mod ceil(log2(m)))`` hops away (and receives
+from the peer the same number of hops behind).  The associated mixing matrix
+is column-stochastic with entries 1/2 (keep half the mass, push half).
+
+On a TPU mesh the worker axis is a (sharded) leading array axis, so "receive
+from the peer `hop` behind" is ``jnp.roll(x, +hop, axis=0)``, which GSPMD
+lowers to a ``collective-permute``.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def num_hop_phases(m: int) -> int:
+    """Number of distinct hop distances in the exponential graph."""
+    if m <= 1:
+        return 1
+    return max(1, math.ceil(math.log2(m)))
+
+
+def exponential_hops(m: int) -> list[int]:
+    """Hop distances cycled through by the time-varying exponential graph."""
+    if m <= 1:
+        return [0]
+    return [2**j % m for j in range(num_hop_phases(m))]
+
+
+def hop_at_step(m: int, k) -> jnp.ndarray:
+    """Hop distance used at (global) inner step ``k`` (traced int ok)."""
+    hops = jnp.asarray(exponential_hops(m), dtype=jnp.int32)
+    return hops[k % hops.shape[0]]
+
+
+def mixing_matrix_exponential(m: int, k: int) -> np.ndarray:
+    """Column-stochastic mixing matrix P_k of the directed exponential graph.
+
+    Column j of P distributes node j's mass: p[j, j] = 1/2 stays, p[(j+hop) %
+    m, j] = 1/2 is pushed to the out-neighbor.  (numpy; used by tests and the
+    reference implementation.)
+    """
+    hops = exponential_hops(m)
+    hop = hops[k % len(hops)]
+    P = np.zeros((m, m))
+    for j in range(m):
+        if hop == 0:
+            P[j, j] = 1.0
+        else:
+            P[j, j] = 0.5
+            P[(j + hop) % m, j] = 0.5
+    return P
+
+
+def mixing_matrix_ring(m: int) -> np.ndarray:
+    """Doubly-stochastic symmetric ring used by D-PSGD (self + both peers)."""
+    P = np.zeros((m, m))
+    for j in range(m):
+        P[j, j] += 1.0 / 3.0
+        P[(j + 1) % m, j] += 1.0 / 3.0
+        P[(j - 1) % m, j] += 1.0 / 3.0
+    if m == 1:
+        P[:] = 1.0
+    return P
+
+
+def roll_workers(tree, hop, axis: int = 0):
+    """Roll every leaf of ``tree`` along the worker axis by ``hop``.
+
+    ``roll(x, +hop)`` places worker ``(i - hop) % m``'s value at slot ``i``,
+    i.e. every worker *receives from the peer hop behind* — exactly the
+    directed push of the exponential graph.  Lowers to collective-permute
+    when the worker axis is sharded.
+    """
+    import jax
+
+    return jax.tree.map(lambda x: jnp.roll(x, hop, axis=axis), tree)

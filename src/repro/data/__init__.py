@@ -1,0 +1,1 @@
+from .synthetic import MarkovLMConfig, chain_entropy, make_audio_sampler, make_markov_sampler

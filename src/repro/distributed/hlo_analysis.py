@@ -1,0 +1,132 @@
+"""HLO analysis: collective-bytes parsing + three-term roofline derivation.
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes accessed, but not
+collective traffic — we parse the (post-SPMD-partitioning, per-device) HLO
+text and sum the result sizes of every collective op.  Hardware model:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (per chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# v5e per-chip constants
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op, per op kind, from HLO text."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not line or "=" not in line:
+            continue
+        for op in COLLECTIVE_OPS:
+            # match ` = TYPE op(` including fusion-free plain calls, and
+            # `op-start(` async forms; skip `-done` (no new traffic)
+            m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
+            if m:
+                out[op] += _shape_bytes(m.group(1))
+                counts[op] += 1
+                break
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    coll_bytes: float  # per-device collective bytes
+    coll_breakdown: dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "collective_breakdown": {
+                k: v for k, v in self.coll_breakdown.items() if k != "_counts"
+            },
+            "collective_counts": self.coll_breakdown.get("_counts", {}),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: str | None = None) -> Roofline:
+    """Derive the three roofline terms from a compiled (per-device) module."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    total_coll = float(sum(v for k, v in coll.items() if k != "_counts"))
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=total_coll,
+        coll_breakdown=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=total_coll / ICI_BW,
+    )
+
+
+def model_flops(n_active_params: int, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D (training) — the useful-work yardstick."""
+    return 6.0 * n_active_params * tokens

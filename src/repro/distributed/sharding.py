@@ -1,0 +1,270 @@
+"""Sharding rules: map every parameter/state/batch leaf to a PartitionSpec.
+
+Rules are written against *trailing* dimensions (leaves may carry leading
+layer-stack axes of varying depth) and keyed by leaf name, with a
+divisibility guard — a dim is only sharded over ``model`` when its size is a
+multiple of the axis size, otherwise it stays replicated.  The SlowMo worker
+axis (leading dim of every training-parameter leaf) is sharded over the
+layout's worker mesh axes.
+
+Sharding summary (Megatron-style within each worker):
+* embed: vocab over model        * lm/cls head: vocab over model
+* attn wq/wk/wv (+biases): head-out dim over model (column-parallel)
+* attn wo / mlp wo / w_down / w_out: contracting dim over model (row-parallel)
+* MoE expert wi/wo (L, E, d, f): EXPERT dim over model (expert parallelism)
+* router / norms / small gates: replicated
+* recurrent widths (lru, conv, gates): channel dim over model
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import WorkerLayout
+
+PyTree = Any
+
+# name -> rule on trailing dims. Each entry is a tuple of axis slots applied
+# to the LAST len(entry) dims; 'M' marks the dim sharded over model axes.
+_TAIL_RULES_3PLUS = {  # applied when leaf ndim (sans worker) >= len + 1 stack
+    # MoE expert weights (…, E, d, f): shard experts
+    "wi": ("M", None, None),
+    "wo": ("M", None, None),
+}
+_TAIL_RULES = {
+    "embed": ("M", None),
+    "lm_head": (None, "M"),
+    "cls_head": (None, "M"),
+    "feature_proj": (None, "M"),
+    "wq": (None, "M"),
+    "wk": (None, "M"),
+    "wv": (None, "M"),
+    "bq": ("M",),
+    "bk": ("M",),
+    "bv": ("M",),
+    "wi": (None, "M"),
+    "wo": ("M", None),
+    "w_up": (None, "M"),
+    "w_gate": (None, "M"),
+    "w_in": (None, "M"),
+    "w_down": ("M", None),
+    "w_out": ("M", None),
+    "w_gates": (None, "M"),
+    "w_a": (None, "M"),
+    "w_x": (None, "M"),
+    "b_a": ("M",),
+    "b_x": ("M",),
+    "lam": ("M",),
+    "conv_w": ("M",),
+    "router": (None, None),  # replicated (small, fp32)
+    "r_gates": (),  # replicated
+}
+
+_MOE_CONTAINERS = ("moe_blocks",)
+
+
+def _leaf_name(path) -> tuple[str, tuple[str, ...]]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(str(p.idx))
+    return (keys[-1] if keys else ""), tuple(keys)
+
+
+def model_spec_tail(name: str, containers: tuple[str, ...], shape, model_size: int):
+    """Trailing-dim PartitionSpec entries for one model-parameter leaf."""
+    ndim = len(shape)
+    in_moe = any(c in containers for c in _MOE_CONTAINERS)
+    rule = None
+    if in_moe and name in _TAIL_RULES_3PLUS and ndim >= 4 and name != "shared":
+        # expert weights are 4D (L, E, d, f); shared-expert weights are 3D
+        if "shared" not in containers:
+            rule = _TAIL_RULES_3PLUS[name]
+    if rule is None:
+        rule = _TAIL_RULES.get(name)
+    if rule is None or len(rule) > ndim:
+        return (None,) * ndim
+    tail = []
+    for slot, dim in zip(rule, shape[ndim - len(rule):]):
+        if slot == "M" and dim % model_size == 0 and dim >= model_size:
+            tail.append("model")
+        else:
+            tail.append(None)
+    return (None,) * (ndim - len(rule)) + tuple(tail)
+
+
+def _specs_for_tree(tree_shapes: PyTree, model_size: int, prefix: tuple = ()) -> PyTree:
+    def one(path, leaf):
+        name, keys = _leaf_name(path)
+        shape = leaf.shape
+        if len(shape) < len(prefix):
+            return P()
+        tail = model_spec_tail(name, keys[:-1], shape[len(prefix):], model_size)
+        return P(*(prefix + tail))
+
+    return jax.tree_util.tree_map_with_path(one, tree_shapes)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def _msize(layout: WorkerLayout) -> int:
+    return int(np.prod([layout.mesh.shape[a] for a in layout.model_axes]))
+
+
+def _wax_entry(layout: WorkerLayout):
+    if not layout.worker_axes:
+        return (None,)
+    return (layout.worker_axes if len(layout.worker_axes) > 1 else layout.worker_axes[0],)
+
+
+def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: bool = False) -> PyTree:
+    """NamedSharding tree for a SlowMoState (shapes from jax.eval_shape).
+
+    ``shard_outer=True`` additionally ZeRO-shards the outer iterate and slow
+    momentum over the worker (data) axes — a beyond-paper optimization; the
+    paper-faithful baseline replicates them on every node.
+    """
+    mesh = layout.mesh
+    M = _msize(layout)
+    wax = _wax_entry(layout)
+
+    params_specs = _specs_for_tree(state_shapes.params, M, prefix=wax)
+    inner_h = _specs_for_tree(state_shapes.inner.h, M, prefix=wax)
+    inner_v = jax.tree.map(
+        lambda s, spec: spec if s.ndim > 0 else P(),
+        state_shapes.inner.v,
+        _specs_for_tree(state_shapes.inner.v, M, prefix=wax),
+    )
+
+    # outer state: worker axis only present for the noaverage variant
+    outer_leaf = jax.tree.leaves(state_shapes.outer_params)
+    param_leaf = jax.tree.leaves(state_shapes.params)
+    noavg = outer_leaf[0].ndim == param_leaf[0].ndim
+    if noavg:
+        outer_prefix = wax
+    elif shard_outer and layout.worker_axes:
+        outer_prefix = wax  # ZeRO: shard leading (stack/first) dim... see below
+    else:
+        outer_prefix = ()
+
+    if noavg or not shard_outer or not layout.worker_axes:
+        outer_specs = _specs_for_tree(
+            state_shapes.outer_params, M, prefix=outer_prefix if noavg else ()
+        )
+    else:
+        # ZeRO outer state: shard the FIRST dim that (a) is not already
+        # model-sharded and (b) divides by the worker count.  Layer-stack
+        # leading dims (61, 36, ...) rarely divide by W=16, so scanning all
+        # dims (d_model/d_ff/vocab usually qualify) is what makes this work.
+        W = layout.num_workers
+
+        def zero_spec(path, leaf):
+            name, keys = _leaf_name(path)
+            tail = list(model_spec_tail(name, keys[:-1], leaf.shape, M))
+            for i, (slot, dim) in enumerate(zip(tail, leaf.shape)):
+                if slot is None and dim % W == 0 and dim >= W:
+                    tail[i] = wax[0]
+                    break
+            return P(*tail)
+
+        outer_specs = jax.tree_util.tree_map_with_path(zero_spec, state_shapes.outer_params)
+    u_specs = outer_specs
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+    from ..core.slowmo import SlowMoState
+    from ..core.base_opt import InnerOptState
+    from ..core.gossip import GossipState
+
+    gossip_w_spec = P(*wax) if state_shapes.gossip.w.ndim else P()
+    stale_leaves = jax.tree.leaves(state_shapes.gossip.stale)
+    stale_specs = (
+        _specs_for_tree(state_shapes.gossip.stale, M, prefix=wax)
+        if stale_leaves and stale_leaves[0].ndim > 0
+        else jax.tree.map(lambda _: P(), state_shapes.gossip.stale)
+    )
+    return SlowMoState(
+        params=ns(params_specs),
+        inner=InnerOptState(h=ns(inner_h), v=ns(inner_v), count=NamedSharding(mesh, P())),
+        gossip=GossipState(
+            w=NamedSharding(mesh, gossip_w_spec),
+            stale=ns(stale_specs),
+            stale_w=NamedSharding(mesh, P() if state_shapes.gossip.stale_w.ndim == 0 else gossip_w_spec),
+        ),
+        outer_params=ns(outer_specs),
+        slow_u=ns(u_specs),
+        step=NamedSharding(mesh, P()),
+        outer_step=NamedSharding(mesh, P()),
+    )
+
+
+def batch_shardings(layout: WorkerLayout, batch_shapes: PyTree) -> PyTree:
+    """Training batches: leaves (tau, W, B, ...)."""
+    mesh = layout.mesh
+    wax = _wax_entry(layout)
+    bax = layout.batch_axes if layout.batch_axes else None
+    bentry = (bax if bax and len(bax) > 1 else (bax[0] if bax else None),)
+
+    def one(leaf):
+        rest = (None,) * (leaf.ndim - 3)
+        return NamedSharding(mesh, P(*((None,) + wax + bentry + rest)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def serve_param_shardings(layout: WorkerLayout, param_shapes: PyTree) -> PyTree:
+    """Serving parameters: no worker axis, model-parallel only (replicated
+    over the data axes — the serve baseline)."""
+    mesh = layout.mesh
+    specs = _specs_for_tree(param_shapes, _msize(layout), prefix=())
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def serve_cache_shardings(layout: WorkerLayout, cache_shapes: PyTree, batch_size: int) -> PyTree:
+    """KV / recurrent caches: shard the batch dim over the data axes (when
+    divisible) and the trailing dim over model (when divisible)."""
+    mesh = layout.mesh
+    M = _msize(layout)
+    dax = layout.data_axes
+    D = int(np.prod([mesh.shape[a] for a in dax]))
+    dentry = dax if len(dax) > 1 else (dax[0] if dax else None)
+
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        # find the batch dim: the first dim equal to batch_size
+        for i, d in enumerate(leaf.shape):
+            if d == batch_size and batch_size % D == 0 and D > 1:
+                spec[i] = dentry
+                break
+        if leaf.ndim >= 2 and leaf.shape[-1] % M == 0 and leaf.shape[-1] >= M:
+            spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def serve_token_shardings(layout: WorkerLayout, token_shapes: PyTree, batch_size: int) -> PyTree:
+    mesh = layout.mesh
+    dax = layout.data_axes
+    D = int(np.prod([mesh.shape[a] for a in dax]))
+    dentry = dax if len(dax) > 1 else (dax[0] if dax else None)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if leaf.shape[0] == batch_size and batch_size % D == 0 and D > 1:
+            spec[0] = dentry
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, token_shapes)

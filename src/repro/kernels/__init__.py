@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for SlowMo hot spots + pure-jnp oracles (ref.py)."""

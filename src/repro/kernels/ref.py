@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth used by (a) the kernel allclose tests and (b) the
+CPU execution path (the container has no TPU; kernels are validated with
+``interpret=True`` and dispatched on TPU at deploy time).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slowmo_outer_update_ref(x0, x_tau, u, *, gamma, alpha, beta):
+    """Lines 7-8 of Algorithm 1 for one array (fp32).
+
+    u'  = beta * u + (x0 - x_tau) / gamma
+    x0' = x0 - alpha * gamma * u'
+    """
+    x0 = x0.astype(jnp.float32)
+    x_tau = x_tau.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    u_new = beta * u + (x0 - x_tau) / gamma
+    x_new = x0 - alpha * gamma * u_new
+    return x_new, u_new
+
+
+def fused_nesterov_ref(x, h, g, *, lr, momentum, weight_decay=0.0):
+    """Fused SGD-Nesterov inner update (Table C.1) for one array.
+
+    g'  = g + wd * x
+    h'  = mu * h + g'
+    d   = mu * h' + g'
+    x'  = x - lr * d
+    """
+    xf = x.astype(jnp.float32)
+    g = g.astype(jnp.float32) + weight_decay * xf
+    h_new = momentum * h.astype(jnp.float32) + g
+    d = momentum * h_new + g
+    x_new = (xf - lr * d).astype(x.dtype)
+    return x_new, h_new
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None, window=None):
+    """Dense attention oracle with GQA, causal mask and optional local window.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to query heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    iq = jnp.arange(Sq)[:, None] + (Skv - Sq)  # align ends (decode-friendly)
+    ik = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (ik <= iq)
+    if window is not None:
+        mask = mask & (ik > iq - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)
+
+
+import jax  # noqa: E402  (keep import at bottom to highlight jnp-only math)

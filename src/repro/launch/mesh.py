@@ -1,0 +1,75 @@
+"""Production mesh construction + worker-layout mapping.
+
+``make_production_mesh`` is a FUNCTION (module import never touches jax
+device state).  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so both meshes can be built on the CPU-only container.
+
+Worker layouts (see DESIGN.md §2):
+* ``flat``        — paper-faithful: one SlowMo worker per data-axis row
+                    (m=16 single-pod, m=32 multi-pod).
+* ``hierarchical``— beyond-paper: one worker per pod (m=2; multi-pod only);
+                    within-pod DP gradients sync every step over fast ICI,
+                    SlowMo handles only the cross-pod (slow) links.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")) -> Mesh:
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerLayout:
+    """How SlowMo workers map onto mesh axes."""
+
+    mesh: Mesh
+    worker_axes: tuple[str, ...]  # mesh axes forming the worker axis
+    batch_axes: tuple[str, ...]  # remaining axes sharding each worker's batch
+    model_axes: tuple[str, ...] = ("model",)
+
+    @property
+    def num_workers(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.worker_axes]))
+
+    @property
+    def batch_shard(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes])) or 1
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        """All non-model axes (used by serve-path batch sharding)."""
+        return tuple(a for a in self.mesh.axis_names if a not in self.model_axes)
+
+
+def make_layout(mesh: Mesh, style: str = "flat") -> WorkerLayout:
+    axes = mesh.axis_names
+    if style == "flat":
+        wax = tuple(a for a in axes if a != "model")
+        return WorkerLayout(mesh, worker_axes=wax, batch_axes=())
+    if style == "hierarchical":
+        if "pod" not in axes:
+            raise ValueError("hierarchical layout needs a 'pod' axis")
+        return WorkerLayout(mesh, worker_axes=("pod",), batch_axes=("data",))
+    if style == "single":
+        # all devices serve one worker (AR baseline / Lookahead)
+        return WorkerLayout(
+            mesh, worker_axes=(), batch_axes=tuple(a for a in axes if a != "model")
+        )
+    raise ValueError(f"unknown layout style {style!r}")

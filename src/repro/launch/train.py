@@ -1,0 +1,67 @@
+"""Training launcher: pick an architecture + SlowMo algorithm and train.
+
+On the CPU container this runs REDUCED configs (full configs are exercised by
+dryrun.py); on a real TPU slice the same entry point drives the full configs
+with the production mesh sharding.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --algo sgp+slowmo \
+        --rounds 20 --workers 8 --tau 12
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config
+from ..core import slowmo
+from ..data import MarkovLMConfig, make_audio_sampler, make_markov_sampler
+from ..models import build_model, param_count
+from ..train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--algo", default="local_sgd+slowmo")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=12)
+    ap.add_argument("--beta", type=float, default=0.6)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=0.2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true", help="full-size config (TPU)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    model = build_model(cfg)
+    n = param_count(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    print(f"{args.arch}{'' if args.full else ' (reduced)'}: {n/1e6:.1f}M params")
+
+    if cfg.modality == "audio":
+        sampler = make_audio_sampler(cfg.vocab_size, cfg.frontend_dim, args.workers)
+    else:
+        data = MarkovLMConfig(vocab_size=cfg.vocab_size, temperature=0.8)
+        sampler = make_markov_sampler(data, args.workers)
+
+    import dataclasses
+
+    smcfg = dataclasses.replace(
+        slowmo.preset(args.algo, num_workers=args.workers, tau=args.tau, beta=args.beta),
+        alpha=args.alpha,
+        param_dtype=cfg.dtype if args.full else jnp.float32,
+    )
+    tc = TrainConfig(
+        total_rounds=args.rounds, per_worker_batch=args.batch, seq_len=args.seq,
+        lr=args.lr, log_every=max(args.rounds // 10, 1),
+        ckpt_every=10 if args.ckpt else 0, ckpt_path=args.ckpt,
+    )
+    Trainer(model, smcfg, tc, sampler).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: all assigned architectures as pure-functional JAX models."""
+from .api import ModelBundle, batch_spec, build_model, make_batch, param_count

@@ -1,0 +1,155 @@
+"""Dense transformer LM — covers qwen3-8b/4b, qwen2-7b, olmo-1b, chameleon-34b
+(early-fusion VLM over a fused token vocabulary) and hubert-xlarge (encoder-
+only audio backbone with a stubbed conv-feature frontend).
+
+Layers are stacked with a leading L axis and executed with scan-over-layers
+(compact HLO; essential for the 61-layer dry-runs).  ``cfg.remat`` wraps the
+block in jax.checkpoint for training-memory control.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+PyTree = Any
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    L = cfg.n_layers
+    keys = jax.random.split(key, 8)
+    blocks = {
+        "attn": common.init_attn(cfg, keys[0], layers=L),
+        "mlp": common.init_mlp(cfg, keys[1], layers=L),
+    }
+    if cfg.norm_type != "nonparam_ln":
+        blocks["ln1"] = jnp.zeros((L, cfg.d_model), jnp.float32)
+        blocks["ln2"] = jnp.zeros((L, cfg.d_model), jnp.float32)
+    params = {"blocks": blocks}
+    if cfg.modality == "audio":
+        params["feature_proj"] = common.dense_init(keys[2], (cfg.frontend_dim, cfg.d_model))
+        params["mask_embed"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        params["cls_head"] = common.dense_init(keys[3], (cfg.d_model, cfg.vocab_size))
+    else:
+        params["embed"] = common.embed_init(keys[2], (cfg.vocab_size, cfg.d_model))
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(keys[3], (cfg.d_model, cfg.vocab_size))
+    if cfg.norm_type != "nonparam_ln":
+        params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+def _block(cfg: ModelConfig, x, positions, bp):
+    h = common.apply_norm(cfg, x, bp.get("ln1"))
+    q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+    o = common.attention(cfg, q, k, v)
+    x = x + common.attn_out(cfg, bp["attn"], o)
+    h = common.apply_norm(cfg, x, bp.get("ln2"))
+    x = x + common.mlp(cfg, bp["mlp"], h)
+    return x
+
+
+def backbone(cfg: ModelConfig, params, x, positions):
+    """Run the stacked blocks over embeddings x (B, S, d)."""
+    block = functools.partial(_block, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block, static_argnums=())
+
+    def body(carry, bp):
+        return block(carry, positions, bp), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
+    return common.apply_norm(cfg, x, params.get("final_norm"))
+
+
+def forward(cfg: ModelConfig, params, batch, last_only: bool = False) -> jnp.ndarray:
+    """Return logits (B, S, V); last_only => logits for the final position only
+    (prefill-style serving: avoids materializing the full-vocab logits)."""
+    if cfg.modality == "audio":
+        feats = batch["features"].astype(cfg.dtype)
+        x = feats @ params["feature_proj"].astype(cfg.dtype)
+        if "mask" in batch:
+            m = batch["mask"][..., None].astype(cfg.dtype)
+            x = x * (1 - m) + params["mask_embed"].astype(cfg.dtype) * m
+    else:
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    x = backbone(cfg, params, x, positions)
+    if last_only:
+        x = x[:, -1:]
+    if cfg.modality == "audio":
+        head = params["cls_head"]
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch)
+    if cfg.modality == "audio":
+        # HuBERT-style masked prediction: CE over cluster ids at masked frames.
+        return common.softmax_xent(logits, batch["labels"], batch["mask"])
+    return common.next_token_loss(logits, batch["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# decode (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> PyTree:
+    hd = cfg.resolved_head_dim
+    # sliding-window models only need a window-sized cache
+    S = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (cfg.n_layers, batch_size, S, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),  # absolute position of next token
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens) -> tuple[jnp.ndarray, PyTree]:
+    """tokens: (B, 1) -> logits (B, 1, V) and the updated cache.
+
+    The cache ring-buffers over ``window`` for sliding-window models.
+    """
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["pos"]
+    positions = jnp.full(tokens.shape, pos, jnp.int32)
+    S_cache = cache["k"].shape[2]
+    slot = pos % S_cache if cfg.window else jnp.minimum(pos, S_cache - 1)
+
+    def body(carry, layer):
+        x = carry
+        bp, kc, vc = layer
+        h = common.apply_norm(cfg, x, bp.get("ln1"))
+        q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        if cfg.window:
+            # ring buffer: all slots valid once pos >= window
+            o = common.decode_attention(q, kc, vc, jnp.minimum(pos, S_cache - 1))
+            # mask handled by validity below: positions beyond pos are zeros at
+            # start; for pos < window the natural <=pos mask applies because
+            # slot == pos there.
+        else:
+            o = common.decode_attention(q, kc, vc, pos)
+        x = x + common.attn_out(cfg, bp["attn"], o)
+        h = common.apply_norm(cfg, x, bp.get("ln2"))
+        x = x + common.mlp(cfg, bp["mlp"], h)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"]), unroll=cfg.unroll_layers
+    )
+    x = common.apply_norm(cfg, x, params.get("final_norm"))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, new_cache

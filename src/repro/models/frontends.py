@@ -1,0 +1,46 @@
+"""STUB modality frontends (the one sanctioned carve-out, see DESIGN.md §4).
+
+The audio conv feature extractor (HuBERT) and the VQ image tokenizer
+(Chameleon) are NOT implemented; these helpers define exactly what the
+backbone consumes so that `input_specs()` can stand in for them:
+
+* audio: 512-dim frame features at 50 Hz (the output of wav2vec2's conv
+  stack) + masked-prediction targets over the 504-cluster codebook;
+* vlm:  image regions arrive as VQ codes already merged into the fused
+  65536-entry vocabulary (early fusion) — so the backbone input is plain
+  token ids; the stub only fixes the id layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def input_specs(cfg: ModelConfig, batch: int, seq: int) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one training batch of this modality.
+
+    This is the dry-run contract: weak-type-correct, shardable, and requiring
+    no device allocation.  (Identical to models.api.batch_spec — re-exported
+    here under the frontend-centric name the launch scripts use.)
+    """
+    from .api import batch_spec
+
+    return batch_spec(cfg, batch, seq)
+
+
+def fake_audio_frames(key, batch: int, seq: int, frontend_dim: int = 512):
+    """Stand-in for the conv feature extractor output (B, S, 512)."""
+    return jax.random.normal(key, (batch, seq, frontend_dim))
+
+
+def fake_vq_tokens(key, batch: int, seq: int, vocab: int, image_span: int = 256):
+    """Early-fusion stream: text ids with an interleaved block of 'image'
+    ids (drawn from the top half of the vocabulary, Chameleon-style)."""
+    k1, k2 = jax.random.split(key)
+    text = jax.random.randint(k1, (batch, seq), 0, vocab // 2)
+    img = jax.random.randint(k2, (batch, seq), vocab // 2, vocab)
+    pos = jnp.arange(seq)
+    in_image = (pos >= seq // 4) & (pos < seq // 4 + min(image_span, seq // 2))
+    return jnp.where(in_image[None, :], img, text).astype(jnp.int32)

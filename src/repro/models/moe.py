@@ -1,0 +1,271 @@
+"""Fine-grained Mixture-of-Experts LM — deepseek-moe-16b and kimi-k2-1t-a32b.
+
+Routing is GShard/Switch-style capacity-based top-k with einsum dispatch and
+combine, which GSPMD shards cleanly: the expert axis of the dispatch tensors
+and the expert weights is sharded over the ``model`` mesh axis, so the
+per-expert FFN compute is expert-parallel and the combine reduction lowers to
+an all-reduce over the model axis.
+
+Structure follows DeepSeekMoE: ``first_k_dense`` leading dense-FFN layers,
+then MoE layers with ``n_shared_experts`` always-on shared experts (merged
+into one wide FFN) plus ``n_experts`` routed experts with top-k gating and a
+load-balance auxiliary loss (Switch-style  E * sum_e f_e * p_e).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common, dense
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# router + dispatch
+# ---------------------------------------------------------------------------
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = int(group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def route(cfg: ModelConfig, router_w, x_grouped):
+    """x_grouped: (G, Sg, d). Returns (combine (G,Sg,E,C) f32, aux loss)."""
+    G, Sg, d = x_grouped.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, Sg)
+    logits = (x_grouped.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Sg, E)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (G, Sg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # choice-major priority: all top-1 assignments beat any top-2 assignment
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, Sg, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * Sg, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # position within expert queue
+    keep = (pos < C) * flat  # (G, kSg, E)
+    pos = pos.reshape(G, k, Sg, E).transpose(0, 2, 1, 3)  # (G, Sg, k, E)
+    keep = keep.reshape(G, k, Sg, E).transpose(0, 2, 1, 3)
+    if cfg.moe_dispatch == "compact":
+        # §Perf optimization: each (token, choice) has exactly ONE expert, so
+        # the slot one-hot does not need an E axis — (G,Sg,k,C) instead of
+        # (G,Sg,k,E,C), an E-fold cut in dispatch-tensor traffic.
+        pos_sel = jnp.sum(pos * onehot, axis=-1)  # (G, Sg, k)
+        keep_sel = jnp.sum(keep, axis=-1)  # (G, Sg, k) in {0,1}
+        slot_sel = jax.nn.one_hot(pos_sel.astype(jnp.int32), C, dtype=jnp.float32)
+        combine = jnp.einsum(
+            "gske,gsk,gskc->gsec", keep, gate_vals * keep_sel, slot_sel
+        )
+    else:  # 'onehot_ec': the naive GShard formulation (baseline)
+        slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        combine = jnp.einsum(
+            "gske,gsk,gskec->gsec", keep, gate_vals, slot_oh * keep[..., None]
+        )
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e  with f_e from top-1
+    top1 = onehot[:, :, 0, :]  # (G, Sg, E)
+    f_e = jnp.mean(top1, axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e)
+    return combine, aux
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, d). Routed experts + shared experts. Returns (out, aux)."""
+    B, S, d = x.shape
+    Sg = min(cfg.moe_group_size, B * S)
+    assert (B * S) % Sg == 0, (B, S, Sg)
+    G = (B * S) // Sg
+    xg = x.reshape(G, Sg, d)
+    combine, aux = route(cfg, p["router"], xg)
+    dispatch = (combine > 0).astype(cfg.dtype)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(cfg.dtype))
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(cfg.dtype))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(cfg.dtype) * up
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cfg.dtype))
+    out = jnp.einsum(
+        "gsec,gecd->gsd", combine.astype(cfg.dtype), expert_out
+    ).reshape(B, S, d)
+    if cfg.n_shared_experts:
+        out = out + common.mlp(cfg, p["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# params / blocks
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    keys = jax.random.split(key, 12)
+    L_dense = cfg.first_k_dense
+    L_moe = cfg.n_layers - L_dense
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+
+    def moe_block_params(k):
+        ks = jax.random.split(k, 5)
+        p = {
+            "attn": common.init_attn(cfg, ks[0], layers=L_moe),
+            "router": common.dense_init(ks[1], (L_moe, d, E)),
+            "wi": common.dense_init(ks[2], (L_moe, E, d, 2 * f)),
+            "wo": common.dense_init(ks[3], (L_moe, E, f, d)),
+            "ln1": jnp.zeros((L_moe, d), jnp.float32),
+            "ln2": jnp.zeros((L_moe, d), jnp.float32),
+        }
+        if cfg.n_shared_experts:
+            fs = cfg.n_shared_experts * f
+            k1, k2 = jax.random.split(ks[4])
+            p["shared"] = {
+                "wi": common.dense_init(k1, (L_moe, d, 2 * fs)),
+                "wo": common.dense_init(k2, (L_moe, fs, d)),
+            }
+        return p
+
+    params = {"moe_blocks": moe_block_params(keys[0])}
+    if L_dense:
+        dense_cfg = cfg.replace(d_ff=cfg.dense_d_ff or cfg.d_ff)
+        params["dense_blocks"] = {
+            "attn": common.init_attn(dense_cfg, keys[1], layers=L_dense),
+            "mlp": common.init_mlp(dense_cfg, keys[2], layers=L_dense),
+            "ln1": jnp.zeros((L_dense, d), jnp.float32),
+            "ln2": jnp.zeros((L_dense, d), jnp.float32),
+        }
+    params["embed"] = common.embed_init(keys[3], (cfg.vocab_size, d))
+    params["lm_head"] = common.dense_init(keys[4], (d, cfg.vocab_size))
+    params["final_norm"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def _moe_block(cfg: ModelConfig, x, positions, bp):
+    h = common.apply_norm(cfg, x, bp["ln1"])
+    q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+    o = common.attention(cfg, q, k, v)
+    x = x + common.attn_out(cfg, bp["attn"], o)
+    h = common.apply_norm(cfg, x, bp["ln2"])
+    ff, aux = moe_ffn(cfg, bp, h)
+    return x + ff, aux
+
+
+def backbone(cfg: ModelConfig, params, x, positions):
+    if cfg.first_k_dense:
+        dense_cfg = cfg.replace(d_ff=cfg.dense_d_ff or cfg.d_ff)
+        block = functools.partial(dense._block, dense_cfg)
+        if cfg.remat:
+            block = jax.checkpoint(block)
+
+        def dbody(carry, bp):
+            return block(carry, positions, bp), None
+
+        x, _ = jax.lax.scan(dbody, x, params["dense_blocks"], unroll=cfg.unroll_layers)
+
+    block = functools.partial(_moe_block, cfg)
+    if cfg.remat:
+        block = jax.checkpoint(block)
+
+    def body(carry, bp):
+        y, aux = block(carry, positions, bp)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, params["moe_blocks"], unroll=cfg.unroll_layers)
+    x = common.apply_norm(cfg, x, params["final_norm"])
+    return x, jnp.sum(auxs)
+
+
+def forward(cfg: ModelConfig, params, batch, last_only: bool = False):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    x, aux = backbone(cfg, params, x, positions)
+    if last_only:
+        x = x[:, -1:]
+    return x @ params["lm_head"].astype(x.dtype), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux = forward(cfg, params, batch)
+    return common.next_token_loss(logits, batch["tokens"]) + cfg.aux_loss_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> PyTree:
+    hd = cfg.resolved_head_dim
+    shape = lambda L: (L, batch_size, max_len, cfg.n_kv_heads, hd)  # noqa: E731
+    cache = {
+        "k_moe": jnp.zeros(shape(cfg.n_layers - cfg.first_k_dense), cfg.dtype),
+        "v_moe": jnp.zeros(shape(cfg.n_layers - cfg.first_k_dense), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.first_k_dense:
+        cache["k_dense"] = jnp.zeros(shape(cfg.first_k_dense), cfg.dtype)
+        cache["v_dense"] = jnp.zeros(shape(cfg.first_k_dense), cfg.dtype)
+    return cache
+
+
+def _decode_moe_ffn(cfg: ModelConfig, bp, x):
+    """Decode-time MoE: reuse the dispatch-einsum path with one group of B
+    tokens (keeps expert weights sharded in place — no per-token weight
+    gathers, which would materialize (B, k, d, f) slices of the expert
+    weights)."""
+    B, S, d = x.shape  # S == 1
+    ff, _ = moe_ffn(cfg.replace(moe_group_size=B * S), bp, x)
+    return ff
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["pos"]
+    positions = jnp.full(tokens.shape, pos, jnp.int32)
+
+    if cfg.first_k_dense:
+        dense_cfg = cfg.replace(d_ff=cfg.dense_d_ff or cfg.d_ff)
+
+        def dbody(carry, layer):
+            x = carry
+            bp, kc, vc = layer
+            h = common.apply_norm(dense_cfg, x, bp["ln1"])
+            q, k, v = common.qkv_project(dense_cfg, bp["attn"], h, positions)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+            o = common.decode_attention(q, kc, vc, pos)
+            x = x + common.attn_out(dense_cfg, bp["attn"], o)
+            h = common.apply_norm(dense_cfg, x, bp["ln2"])
+            x = x + common.mlp(dense_cfg, bp["mlp"], h)
+            return x, (kc, vc)
+
+        x, (kd, vd) = jax.lax.scan(
+            dbody, x, (params["dense_blocks"], cache["k_dense"], cache["v_dense"]),
+            unroll=cfg.unroll_layers,
+        )
+    else:
+        kd = vd = None
+
+    def body(carry, layer):
+        x = carry
+        bp, kc, vc = layer
+        h = common.apply_norm(cfg, x, bp["ln1"])
+        q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        o = common.decode_attention(q, kc, vc, pos)
+        x = x + common.attn_out(cfg, bp["attn"], o)
+        h = common.apply_norm(cfg, x, bp["ln2"])
+        x = x + _decode_moe_ffn(cfg, bp, h)
+        return x, (kc, vc)
+
+    x, (km, vm) = jax.lax.scan(
+        body, x, (params["moe_blocks"], cache["k_moe"], cache["v_moe"]),
+        unroll=cfg.unroll_layers,
+    )
+    x = common.apply_norm(cfg, x, params["final_norm"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    new_cache = dict(cache, k_moe=km, v_moe=vm, pos=pos + 1)
+    if cfg.first_k_dense:
+        new_cache.update(k_dense=kd, v_dense=vd)
+    return logits, new_cache

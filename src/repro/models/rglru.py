@@ -1,0 +1,349 @@
+"""RecurrentGemma-style hybrid (recurrentgemma-2b): RG-LRU recurrent blocks
+interleaved 2:1 with local sliding-window MQA attention blocks.
+
+RG-LRU (Griffin/Hawk): per-channel gated linear recurrence
+    r_t = sigmoid(W_a x_t)                       (recurrence gate)
+    i_t = sigmoid(W_x x_t)                       (input gate)
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training evaluates the linear recurrence with ``lax.associative_scan``
+(O(S log S) work, fully parallel); decode is an O(1) step.  The recurrent
+branch is preceded by a short causal depthwise conv (width 4).  Sub-quadratic
+everywhere => the 500k-token decode shape runs for this architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+PyTree = Any
+
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (S)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rg_lru_seq(p, x, h0):
+    """x: (B, S, W) conv output; h0: (B, W). Returns (h_seq, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xf, p["w_x"]) + p["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    h = lru_scan(a, b, h0)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(p, xt, h_prev):
+    """xt: (B, W); h_prev: (B, W) fp32."""
+    xf = xt.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"] + p["b_x"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    h = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return h.astype(xt.dtype), h
+
+
+def causal_conv_seq(w, x, state=None):
+    """Depthwise causal conv, width K. x: (B, S, W); w: (K, W).
+
+    state: (B, K-1, W) trailing context from the previous segment."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(
+        xp[:, k : k + x.shape[1]] * w[k].astype(x.dtype) for k in range(K)
+    )
+    return out, xp[:, -(K - 1) :]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_rec_block(cfg: ModelConfig, key, layers=None):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    L = (layers,) if layers is not None else ()
+    ks = jax.random.split(key, 8)
+    # Lambda init so a^(1/(c*r~0.5)) lands in [0.9, 0.999]
+    lam0 = jnp.linspace(0.9, 0.999, W)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam0) / (LRU_C * 0.5)))
+    return {
+        "ln": jnp.zeros(L + (d,), jnp.float32),
+        "w_in": common.dense_init(ks[0], L + (d, W)),  # recurrent branch
+        "w_gate": common.dense_init(ks[1], L + (d, W)),  # gelu gate branch
+        "conv_w": (jax.random.normal(ks[2], L + (cfg.conv_width, W)) * 0.1).astype(jnp.float32),
+        "w_a": common.dense_init(ks[3], L + (W, W)),
+        "b_a": jnp.zeros(L + (W,), jnp.float32),
+        "w_x": common.dense_init(ks[4], L + (W, W)),
+        "b_x": jnp.zeros(L + (W,), jnp.float32),
+        "lam": jnp.broadcast_to(lam, L + (W,)).astype(jnp.float32),
+        "w_out": common.dense_init(ks[5], L + (W, d)),
+        "ln2": jnp.zeros(L + (d,), jnp.float32),
+        "mlp": common.init_mlp(cfg, ks[6], layers=layers),
+    }
+
+
+def rec_block_seq(cfg: ModelConfig, bp, x, state):
+    """state: dict(h (B,W) fp32, conv (B,K-1,W))."""
+    dt = x.dtype
+    h = common.rmsnorm(x, bp["ln"])
+    u = h @ bp["w_in"].astype(dt)
+    g = jax.nn.gelu((h @ bp["w_gate"].astype(dt)).astype(jnp.float32)).astype(dt)
+    u, conv_state = causal_conv_seq(bp["conv_w"], u, state["conv"])
+    hseq, h_last = rg_lru_seq(bp, u, state["h"])
+    x = x + (hseq * g) @ bp["w_out"].astype(dt)
+    h2 = common.rmsnorm(x, bp["ln2"])
+    x = x + common.mlp(cfg, bp["mlp"], h2)
+    return x, {"h": h_last, "conv": conv_state}
+
+
+def rec_block_step(cfg: ModelConfig, bp, x, state):
+    dt = x.dtype
+    h = common.rmsnorm(x[:, 0], bp["ln"])
+    u = h @ bp["w_in"].astype(dt)
+    g = jax.nn.gelu((h @ bp["w_gate"].astype(dt)).astype(jnp.float32)).astype(dt)
+    conv = jnp.concatenate([state["conv"], u[:, None]], axis=1)  # (B, K, W)
+    u = sum(conv[:, k] * bp["conv_w"][k].astype(dt) for k in range(conv.shape[1]))
+    h_new_t, h_new = rg_lru_step(bp, u, state["h"])
+    x = x + ((h_new_t * g) @ bp["w_out"].astype(dt))[:, None]
+    h2 = common.rmsnorm(x, bp["ln2"])
+    x = x + common.mlp(cfg, bp["mlp"], h2)
+    return x, {"h": h_new, "conv": conv[:, 1:]}
+
+
+def init_rec_state(cfg: ModelConfig, B: int):
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((B, W), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv_width - 1, W), cfg.dtype),
+    }
+
+
+def init_attn_block(cfg: ModelConfig, key, layers=None):
+    L = (layers,) if layers is not None else ()
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": jnp.zeros(L + (cfg.d_model,), jnp.float32),
+        "attn": common.init_attn(cfg, k1, layers=layers),
+        "ln2": jnp.zeros(L + (cfg.d_model,), jnp.float32),
+        "mlp": common.init_mlp(cfg, k2, layers=layers),
+    }
+
+
+def attn_block_seq(cfg: ModelConfig, bp, x, positions):
+    h = common.rmsnorm(x, bp["ln"])
+    q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+    o = common.attention(cfg, q, k, v, causal=True, window=cfg.window)
+    x = x + common.attn_out(cfg, bp["attn"], o)
+    h2 = common.rmsnorm(x, bp["ln2"])
+    return x + common.mlp(cfg, bp["mlp"], h2)
+
+
+def attn_block_step(cfg: ModelConfig, bp, x, kc, vc, pos):
+    """Ring-buffer window cache, same scheme as dense.decode_step."""
+    S_cache = kc.shape[1]
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    slot = pos % S_cache
+    h = common.rmsnorm(x, bp["ln"])
+    q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+    o = common.decode_attention(q, kc, vc, jnp.minimum(pos, S_cache - 1))
+    x = x + common.attn_out(cfg, bp["attn"], o)
+    h2 = common.rmsnorm(x, bp["ln2"])
+    return x + common.mlp(cfg, bp["mlp"], h2), kc, vc
+
+
+# ---------------------------------------------------------------------------
+# full model: pattern ('rec','rec','attn') x n_super + tail of 'rec'
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: ModelConfig):
+    plen = len(cfg.pattern)
+    n_super = cfg.n_layers // plen
+    tail = cfg.n_layers % plen  # leading pattern-prefix layers (all 'rec')
+    assert all(p in ("rec", "attn") for p in cfg.pattern)
+    return n_super, tail
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    ks = jax.random.split(key, 8)
+    n_super, tail = _layout(cfg)
+    n_rec_per = sum(p == "rec" for p in cfg.pattern)
+    n_attn_per = sum(p == "attn" for p in cfg.pattern)
+
+    def per_super(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "rec": init_rec_block(cfg, k1, layers=n_rec_per),
+            "attn": init_attn_block(cfg, k2, layers=n_attn_per),
+        }
+
+    params = {
+        "embed": common.embed_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+        "super": jax.vmap(per_super)(jax.random.split(ks[1], n_super)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[2], (cfg.d_model, cfg.vocab_size))
+    if tail:
+        params["tail"] = init_rec_block(cfg, ks[3], layers=tail)
+    return params
+
+
+def _apply_super(cfg, sp, x, positions):
+    """One supergroup following cfg.pattern, fresh zero recurrent state."""
+    B = x.shape[0]
+    rec_i = 0
+    attn_i = 0
+    for p in cfg.pattern:
+        if p == "rec":
+            bp = jax.tree.map(lambda a, i=rec_i: a[i], sp["rec"])
+            x, _ = rec_block_seq(cfg, bp, x, init_rec_state(cfg, B))
+            rec_i += 1
+        else:
+            bp = jax.tree.map(lambda a, i=attn_i: a[i], sp["attn"])
+            x = attn_block_seq(cfg, bp, x, positions)
+            attn_i += 1
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, last_only: bool = False):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+    n_super, tail = _layout(cfg)
+
+    body = functools.partial(_apply_super, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_body(carry, sp):
+        return body(sp, carry, positions), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["super"], unroll=cfg.unroll_layers)
+    if tail:
+        def tbody(carry, bp):
+            y, _ = rec_block_seq(cfg, bp, carry, init_rec_state(cfg, B))
+            return y, None
+
+        x, _ = jax.lax.scan(tbody, x, params["tail"], unroll=cfg.unroll_layers)
+    if last_only:
+        x = x[:, -1:]
+    x = common.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return common.next_token_loss(forward(cfg, params, batch), batch["tokens"])
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> PyTree:
+    n_super, tail = _layout(cfg)
+    n_rec_per = sum(p == "rec" for p in cfg.pattern)
+    n_attn_per = sum(p == "attn" for p in cfg.pattern)
+    hd = cfg.resolved_head_dim
+    Sw = min(max_len, cfg.window or max_len)
+    B = batch_size
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+    cache = {
+        "rec": stack(init_rec_state(cfg, B), n_super * n_rec_per),
+        "k": jnp.zeros((n_super * n_attn_per, B, Sw, cfg.n_kv_heads, hd), cfg.dtype),
+        "v": jnp.zeros((n_super * n_attn_per, B, Sw, cfg.n_kv_heads, hd), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail_rec"] = stack(init_rec_state(cfg, B), tail)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = cache["pos"]
+    n_super, tail = _layout(cfg)
+    n_rec_per = sum(p == "rec" for p in cfg.pattern)
+    n_attn_per = sum(p == "attn" for p in cfg.pattern)
+
+    rec_states = jax.tree.map(
+        lambda s: s.reshape(n_super, n_rec_per, *s.shape[1:]), cache["rec"]
+    )
+    kc = cache["k"].reshape(n_super, n_attn_per, *cache["k"].shape[1:])
+    vc = cache["v"].reshape(n_super, n_attn_per, *cache["v"].shape[1:])
+
+    def super_body(carry, inp):
+        x = carry
+        sp, rs, kcs, vcs = inp
+        rec_i = attn_i = 0
+        rs_new, kc_new, vc_new = [], [], []
+        for p in cfg.pattern:
+            if p == "rec":
+                bp = jax.tree.map(lambda a, i=rec_i: a[i], sp["rec"])
+                st = jax.tree.map(lambda a, i=rec_i: a[i], rs)
+                x, st = rec_block_step(cfg, bp, x, st)
+                rs_new.append(st)
+                rec_i += 1
+            else:
+                bp = jax.tree.map(lambda a, i=attn_i: a[i], sp["attn"])
+                x, kk, vv = attn_block_step(cfg, bp, x, kcs[attn_i], vcs[attn_i], pos)
+                kc_new.append(kk)
+                vc_new.append(vv)
+                attn_i += 1
+        rs_out = jax.tree.map(lambda *xs: jnp.stack(xs), *rs_new)
+        return x, (rs_out, jnp.stack(kc_new), jnp.stack(vc_new))
+
+    x, (rs_new, kc_new, vc_new) = jax.lax.scan(
+        super_body, x, (params["super"], rec_states, kc, vc), unroll=cfg.unroll_layers
+    )
+    new_cache = {
+        "rec": jax.tree.map(lambda s: s.reshape(n_super * n_rec_per, *s.shape[2:]), rs_new),
+        "k": kc_new.reshape(cache["k"].shape),
+        "v": vc_new.reshape(cache["v"].shape),
+        "pos": pos + 1,
+    }
+    if tail:
+        def tbody(carry, layer):
+            x = carry
+            bp, st = layer
+            y, st = rec_block_step(cfg, bp, x, st)
+            return y, st
+
+        x, ts = jax.lax.scan(
+            tbody, x, (params["tail"], cache["tail_rec"]), unroll=cfg.unroll_layers
+        )
+        new_cache["tail_rec"] = ts
+    x = common.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype), new_cache

@@ -1,0 +1,416 @@
+"""xLSTM LM (xlstm-1.3b): mLSTM (matrix-memory, exponential gating) blocks with
+interleaved sLSTM (scalar-memory, recurrent) blocks.
+
+* Training uses a **stabilized chunkwise-parallel mLSTM**: within a chunk the
+  contribution is a decay-masked attention-like einsum; across chunks a
+  linear state (C, n, m) is carried by lax.scan.  Cost is O(S * chunk), i.e.
+  sub-quadratic — this is what makes the 500k-token decode shape feasible.
+* sLSTM is inherently sequential (recurrent weights R on h_{t-1}) and runs as
+  a lax.scan over time.
+* Decode carries (C, n, m) / (c, n, m, h) recurrent caches — O(1) per token.
+
+Stabilization follows the xLSTM paper: states store (C, n) scaled by e^{-m}
+with the running log-max m, and the output denominator is
+max(|q . n|, e^{-m}).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, S, H, hd); log_i/log_f: (B, S, H); state: (C (B,H,hd,hd),
+    n (B,H,hd), m (B,H)).  Returns h (B,S,H,hd) and the final state.
+    """
+    B, S, H, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    scale = hd**-0.5
+
+    def split(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = split(q * scale), split(k), split(v)
+    lis, lfs = split(log_i), split(log_f)  # (nc, B, chunk, H)
+
+    def chunk_body(state, inp):
+        C0, n0, m0 = state  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qc, kc, vc, li, lf = inp  # (B,chunk,H,*)
+        b = jnp.cumsum(lf, axis=1)  # (B,chunk,H) inclusive log-decay
+        a = li - b  # a_s = log_i_s - b_s
+        # per-position running stabilizer M_t = max(m0, max_{s<=t} a_s)
+        run_max = jax.lax.associative_scan(jnp.maximum, a, axis=1)
+        M = jnp.maximum(m0[:, None], run_max)  # (B,chunk,H)
+        # intra-chunk decay mask D_{ts} = exp(a_s - M_t) for s<=t
+        D = jnp.exp(a[:, None, :, :] - M[:, :, None, :])  # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], D, 0.0)
+        s_qk = jnp.einsum("bthd,bshd->btsh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+        w = s_qk * D  # (B,t,s,H)
+        num_intra = jnp.einsum("btsh,bshd->bthd", w, vc.astype(jnp.float32))
+        den_intra = jnp.sum(w, axis=2)  # (B,t,H)
+        inter_scale = jnp.exp(m0[:, None] - M)  # (B,t,H)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qc.astype(jnp.float32), C0) * inter_scale[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qc.astype(jnp.float32), n0) * inter_scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        m_t = b + M  # true log-scale at position t
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h = num / den[..., None]  # (B,t,H,hd)
+
+        # state update to end of chunk
+        B_last = b[:, -1]  # (B,H)
+        Mfull = jnp.maximum(m0, jnp.max(a, axis=1))  # (B,H)
+        decay_s = jnp.exp(a - Mfull[:, None])  # (B,s,H)
+        C_new = (
+            C0 * jnp.exp(m0 - Mfull)[..., None, None]
+            + jnp.einsum("bsh,bshd,bshe->bhde", decay_s, kc.astype(jnp.float32), vc.astype(jnp.float32))
+        )
+        n_new = (
+            n0 * jnp.exp(m0 - Mfull)[..., None]
+            + jnp.einsum("bsh,bshd->bhd", decay_s, kc.astype(jnp.float32))
+        )
+        m_new = B_last + Mfull
+        return (C_new, n_new, m_new), h
+
+    state, hs = jax.lax.scan(chunk_body, state, (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+    return h, state
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """One decode step. q,k,v: (B,H,hd); gates (B,H). Returns h, new state."""
+    C, n, m = state
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    m_new = jnp.maximum(log_f + m, log_i)
+    decay = jnp.exp(log_f + m - m_new)
+    inp = jnp.exp(log_i - m_new)
+    C_new = C * decay[..., None, None] + inp[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n_new = n * decay[..., None] + inp[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    return num / den[..., None], (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _pd(cfg: ModelConfig) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def init_mlstm_block(cfg: ModelConfig, key, layers=None):
+    d, H = cfg.d_model, cfg.n_heads
+    pd = _pd(cfg)
+    hd = pd // H
+    L = (layers,) if layers is not None else ()
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros(L + (d,), jnp.float32),
+        "w_up": common.dense_init(ks[0], L + (d, pd)),
+        "w_gate": common.dense_init(ks[1], L + (d, pd)),
+        # block-diagonal (per-head) q/k/v projections
+        "wq": common.dense_init(ks[2], L + (H, hd, hd)),
+        "wk": common.dense_init(ks[3], L + (H, hd, hd)),
+        "wv": common.dense_init(ks[4], L + (H, hd, hd)),
+        "w_if": common.dense_init(ks[5], L + (d, 2 * H)),
+        # forget-gate bias init high (sigmoid ~ 1): xLSTM init range [3, 6]
+        "b_if": jnp.concatenate(
+            [jnp.zeros(L + (H,)), jnp.full(L + (H,), 4.0)], axis=-1
+        ).astype(jnp.float32),
+        "w_down": common.dense_init(ks[6], L + (pd, d)),
+    }
+
+
+def mlstm_block_seq(cfg: ModelConfig, bp, x, state, chunk=None):
+    """x: (B, S, d) -> (out, new_state). Chunkwise-parallel over S."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    pd = _pd(cfg)
+    hd = pd // H
+    dt = x.dtype
+    h = common.rmsnorm(x, bp["ln"])
+    u = (h @ bp["w_up"].astype(dt)).reshape(B, S, H, hd)
+    g = h @ bp["w_gate"].astype(dt)
+    q = jnp.einsum("bshd,hde->bshe", u, bp["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", u, bp["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", u, bp["wv"].astype(dt))
+    gates = (h @ bp["w_if"].astype(dt)).astype(jnp.float32) + bp["b_if"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    log_f = jax.nn.log_sigmoid(f_raw)
+    hidden, state = mlstm_chunkwise(
+        q, k, v, log_i, log_f, state, chunk or min(cfg.chunk_size, S)
+    )
+    hidden = hidden.astype(dt).reshape(B, S, pd) * jax.nn.silu(
+        g.astype(jnp.float32)
+    ).astype(dt)
+    return x + hidden @ bp["w_down"].astype(dt), state
+
+
+def mlstm_block_step(cfg: ModelConfig, bp, x, state):
+    """x: (B, 1, d) decode step."""
+    B, _, d = x.shape
+    H, pd = cfg.n_heads, _pd(cfg)
+    hd = pd // H
+    dt = x.dtype
+    h = common.rmsnorm(x[:, 0], bp["ln"])
+    u = (h @ bp["w_up"].astype(dt)).reshape(B, H, hd)
+    g = h @ bp["w_gate"].astype(dt)
+    q = jnp.einsum("bhd,hde->bhe", u, bp["wq"].astype(dt))
+    k = jnp.einsum("bhd,hde->bhe", u, bp["wk"].astype(dt))
+    v = jnp.einsum("bhd,hde->bhe", u, bp["wv"].astype(dt))
+    gates = (h @ bp["w_if"].astype(dt)).astype(jnp.float32) + bp["b_if"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)
+    hidden, state = mlstm_step(q, k, v, log_i, jax.nn.log_sigmoid(f_raw), state)
+    hidden = hidden.astype(dt).reshape(B, pd) * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    return x + (hidden @ bp["w_down"].astype(dt))[:, None], state
+
+
+def init_mlstm_state(cfg: ModelConfig, B: int):
+    H, pd = cfg.n_heads, _pd(cfg)
+    hd = pd // H
+    return (
+        jnp.zeros((B, H, hd, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+
+
+# --- sLSTM ------------------------------------------------------------------
+
+def init_slstm_block(cfg: ModelConfig, key, layers=None):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    L = (layers,) if layers is not None else ()
+    ks = jax.random.split(key, 4)
+    ffn_dim = int(4 / 3 * d) // 64 * 64
+    return {
+        "ln": jnp.zeros(L + (d,), jnp.float32),
+        "w_gates": common.dense_init(ks[0], L + (d, 4 * d)),  # z, i, f, o
+        "r_gates": common.dense_init(ks[1], L + (4, H, hd, hd)),  # recurrent
+        "b_gates": jnp.concatenate(
+            [jnp.zeros(L + (2 * d,)), jnp.full(L + (d,), 4.0), jnp.zeros(L + (d,))],
+            axis=-1,
+        ).astype(jnp.float32),
+        "ln_ffn": jnp.zeros(L + (d,), jnp.float32),
+        "ffn": {
+            "wi": common.dense_init(ks[2], L + (d, 2 * ffn_dim)),
+            "wo": common.dense_init(ks[3], L + (ffn_dim, d)),
+        },
+    }
+
+
+def slstm_cell_step(cfg: ModelConfig, bp, xt, state):
+    """xt: (B, d) pre-activations source; state: (c, n, m, h) each (B, d)."""
+    B, d = xt.shape
+    H = cfg.n_heads
+    hd = d // H
+    c, n, m, h_prev = state
+    dt = xt.dtype
+    pre = (xt @ bp["w_gates"].astype(dt)).astype(jnp.float32)  # (B, 4d)
+    hp = h_prev.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", hp.astype(jnp.float32), bp["r_gates"]).reshape(4, B, d)
+    pre = (pre.reshape(B, 4, d) + rec.transpose(1, 0, 2)).reshape(B, 4 * d)
+    pre = pre + bp["b_gates"]
+    zr, ir, fr, orr = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zr)
+    log_f = jax.nn.log_sigmoid(fr)
+    o = jax.nn.sigmoid(orr)
+    m_new = jnp.maximum(log_f + m, ir)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(ir - m_new) * z
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(ir - m_new)
+    h = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+    return h.astype(xt.dtype), (c_new, n_new, m_new, h)
+
+
+def slstm_block_seq(cfg: ModelConfig, bp, x, state):
+    B, S, d = x.shape
+    h_in = common.rmsnorm(x, bp["ln"])
+
+    def body(state, xt):
+        h, state = slstm_cell_step(cfg, bp, xt, state)
+        return state, h
+
+    state, hs = jax.lax.scan(body, state, h_in.swapaxes(0, 1))
+    x = x + hs.swapaxes(0, 1)
+    h2 = common.rmsnorm(x, bp["ln_ffn"])
+    ffn_cfg = cfg.replace(act="swiglu")
+    return x + common.mlp(ffn_cfg, bp["ffn"], h2), state
+
+
+def slstm_block_step(cfg: ModelConfig, bp, x, state):
+    h_in = common.rmsnorm(x[:, 0], bp["ln"])
+    h, state = slstm_cell_step(cfg, bp, h_in, state)
+    x = x + h[:, None]
+    h2 = common.rmsnorm(x, bp["ln_ffn"])
+    ffn_cfg = cfg.replace(act="swiglu")
+    return x + common.mlp(ffn_cfg, bp["ffn"], h2), state
+
+
+def init_slstm_state(cfg: ModelConfig, B: int):
+    d = cfg.d_model
+    return (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.full((B, d), -1e30, jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _layout(cfg: ModelConfig):
+    """Return (n_super, mlstm_per_super, n_tail_mlstm)."""
+    if not cfg.slstm_every:
+        return 0, 0, cfg.n_layers
+    n_super = cfg.n_layers // cfg.slstm_every
+    tail = cfg.n_layers % cfg.slstm_every
+    return n_super, cfg.slstm_every - 1, tail
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    ks = jax.random.split(key, 6)
+    n_super, m_per, tail = _layout(cfg)
+    params = {
+        "embed": common.embed_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+    if n_super:
+        # (n_super, m_per, ...) stacked mLSTM + (n_super, ...) sLSTM
+        def per_super(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mlstm": init_mlstm_block(cfg, k1, layers=m_per),
+                "slstm": init_slstm_block(cfg, k2),
+            }
+
+        params["super"] = jax.vmap(per_super)(jax.random.split(ks[2], n_super))
+    if tail:
+        params["tail"] = init_mlstm_block(cfg, ks[3], layers=tail)
+    return params
+
+
+def forward(cfg: ModelConfig, params, batch, last_only: bool = False):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    B, S, d = x.shape
+    n_super, m_per, tail = _layout(cfg)
+
+    def mlstm_scan(x, stack):
+        def body(carry, bp):
+            y, _ = mlstm_block_seq(cfg, bp, carry, init_mlstm_state(cfg, B))
+            return y, None
+
+        y, _ = jax.lax.scan(body, x, stack, unroll=cfg.unroll_layers)
+        return y
+
+    if n_super:
+        def super_body(carry, sp):
+            y = mlstm_scan(carry, sp["mlstm"])
+            y, _ = slstm_block_seq(cfg, sp["slstm"], y, init_slstm_state(cfg, B))
+            return y, None
+
+        x, _ = jax.lax.scan(super_body, x, params["super"], unroll=cfg.unroll_layers)
+    if tail:
+        x = mlstm_scan(x, params["tail"])
+    if last_only:
+        x = x[:, -1:]
+    x = common.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return common.next_token_loss(forward(cfg, params, batch), batch["tokens"])
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> PyTree:
+    n_super, m_per, tail = _layout(cfg)
+    B = batch_size
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+
+    def stack(init_fn, n):
+        one = init_fn(cfg, B)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), one)
+
+    if n_super:
+        cache["m_states"] = stack(init_mlstm_state, n_super * m_per) if m_per else None
+        cache["s_states"] = stack(init_slstm_state, n_super)
+    if tail:
+        cache["tail_states"] = stack(init_mlstm_state, tail)
+    return {k: v for k, v in cache.items() if v is not None}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    B = x.shape[0]
+    n_super, m_per, tail = _layout(cfg)
+    new_cache = dict(cache)
+
+    if n_super:
+        m_states = cache["m_states"]  # leaves (n_super*m_per, B, ...)
+        s_states = cache["s_states"]
+
+        def super_body(carry, inp):
+            x = carry
+            sp, ms, ss = inp
+
+            def mbody(carry, layer):
+                x = carry
+                bp, st = layer
+                y, st = mlstm_block_step(cfg, bp, x, st)
+                return y, st
+
+            x, ms = jax.lax.scan(mbody, x, (sp["mlstm"], ms), unroll=cfg.unroll_layers)
+            x, ss = slstm_block_step(cfg, sp["slstm"], x, ss)
+            return x, (ms, ss)
+
+        ms_grouped = jax.tree.map(
+            lambda s: s.reshape(n_super, m_per, *s.shape[1:]), m_states
+        )
+        x, (ms_new, ss_new) = jax.lax.scan(
+            super_body, x, (params["super"], ms_grouped, s_states),
+            unroll=cfg.unroll_layers,
+        )
+        new_cache["m_states"] = jax.tree.map(
+            lambda s: s.reshape(n_super * m_per, *s.shape[2:]), ms_new
+        )
+        new_cache["s_states"] = ss_new
+    if tail:
+        def tbody(carry, layer):
+            x = carry
+            bp, st = layer
+            y, st = mlstm_block_step(cfg, bp, x, st)
+            return y, st
+
+        x, ts = jax.lax.scan(
+            tbody, x, (params["tail"], cache["tail_states"]), unroll=cfg.unroll_layers
+        )
+        new_cache["tail_states"] = ts
+    x = common.rmsnorm(x, params["final_norm"])
+    new_cache["pos"] = cache["pos"] + 1
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype), new_cache

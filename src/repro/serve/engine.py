@@ -1,0 +1,77 @@
+"""Batched decode serving engine.
+
+Drives ``decode_step`` for a batch of requests with a shared ring/linear
+cache: prefill by stepping the prompt tokens, then greedy/temperature
+sampling for the generation phase.  This is the substrate exercised by the
+``decode_32k`` / ``long_500k`` dry-run shapes (there, with ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import ModelBundle
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class DecodeEngine:
+    def __init__(self, model: ModelBundle, params: PyTree, cfg: ServeConfig):
+        if model.decode_step is None:
+            raise ValueError(f"{model.config.name} is encoder-only: no decode")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._step = jax.jit(model.decode_step)
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,  # (B, P) int32 prompt tokens
+        num_tokens: int,
+        key: Optional[jax.Array] = None,
+    ) -> tuple[jnp.ndarray, dict]:
+        B, P = prompts.shape
+        cache = self.model.init_cache(B, self.cfg.max_len)
+        key = key or jax.random.PRNGKey(self.cfg.seed)
+        t0 = time.perf_counter()
+
+        # prefill: feed prompt tokens one at a time (decode-path prefill)
+        logits = None
+        for t in range(P):
+            logits, cache = self._step(self.params, cache, prompts[:, t : t + 1])
+        t_prefill = time.perf_counter() - t0
+
+        out = []
+        tok = self._sample(logits, key, 0)
+        out.append(tok)
+        for i in range(1, num_tokens):
+            logits, cache = self._step(self.params, cache, tok)
+            tok = self._sample(logits, key, i)
+            out.append(tok)
+        gen = jnp.concatenate(out, axis=1)
+        gen.block_until_ready()
+        t_total = time.perf_counter() - t0
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_total - t_prefill,
+            "tokens_per_s": B * num_tokens / max(t_total - t_prefill, 1e-9),
+        }
+        return gen, stats
+
+    def _sample(self, logits, key, i):
+        last = logits[:, -1].astype(jnp.float32)
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, last / self.cfg.temperature)[:, None].astype(jnp.int32)

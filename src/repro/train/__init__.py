@@ -1,0 +1,2 @@
+from .trainer import TrainConfig, Trainer
+from . import checkpoint, schedules

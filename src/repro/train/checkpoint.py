@@ -1,0 +1,40 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary pytrees (SlowMoState
+included), host-gathered.  No external deps; restore reconstructs the exact
+tree structure from the saved treedef repr + flat arrays."""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def save(path: str, tree: PyTree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".treedef", "wb") as f:
+        pickle.dump(treedef, f)
+    meta = {"num_leaves": len(leaves), "step": step}
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str) -> tuple[PyTree, dict]:
+    with open(path + ".treedef", "rb") as f:
+        treedef = pickle.load(f)
+    data = np.load(path + ".npz")
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    return jax.tree.unflatten(treedef, leaves), meta
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path + ".npz") and os.path.exists(path + ".treedef")

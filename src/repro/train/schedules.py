@@ -1,0 +1,34 @@
+"""Learning-rate schedules used in the paper's experiments."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_step_decay(base_lr: float, warmup_steps: int, decay_steps: tuple[int, ...], decay_factor: float = 0.1):
+    """Goyal et al. (2017) schedule (paper's CIFAR/ImageNet setting):
+    linear warmup then x0.1 drops at milestones."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        drops = sum(jnp.asarray(step >= s, jnp.float32) for s in decay_steps)
+        return warm * decay_factor**drops
+
+    return lr
+
+
+def inverse_sqrt(base_lr: float, warmup_steps: int):
+    """Transformer schedule (paper's WMT setting, Ott et al. 2018)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        return base_lr * jnp.minimum(step / warmup_steps, (warmup_steps / step) ** 0.5)
+
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.full((), base_lr, jnp.float32)
+
+    return lr

@@ -1,0 +1,126 @@
+"""Training loop: SlowMo rounds over a model bundle + data sampler.
+
+The unit of work is one SlowMo *round* (tau inner steps + outer update), so
+the trainer's step counter advances by tau per iteration.  Metrics, LR
+scheduling (per outer round, matching the paper's gamma_t), periodic
+checkpointing and eval hooks live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import slowmo
+from ..core.slowmo import SlowMoConfig, SlowMoState
+from ..models.api import ModelBundle
+from . import checkpoint as ckpt_lib
+from . import schedules
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_rounds: int = 100
+    per_worker_batch: int = 8
+    seq_len: int = 128
+    lr: float = 0.1
+    schedule: str = "constant"  # 'constant' | 'warmup_step' | 'inv_sqrt'
+    warmup_steps: int = 5
+    decay_rounds: tuple[int, ...] = ()
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_path: str = ""
+    grad_clip: float = 0.0  # (applied inside loss via value clipping if set)
+
+
+def make_lr_fn(tc: TrainConfig):
+    if tc.schedule == "warmup_step":
+        return schedules.warmup_step_decay(tc.lr, tc.warmup_steps, tc.decay_rounds)
+    if tc.schedule == "inv_sqrt":
+        return schedules.inverse_sqrt(tc.lr, tc.warmup_steps)
+    return schedules.constant(tc.lr)
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: ModelBundle,
+        smcfg: SlowMoConfig,
+        tc: TrainConfig,
+        sampler: Callable[[int, int, int, int], PyTree],
+        *,
+        eval_fn: Optional[Callable[[PyTree], float]] = None,
+    ):
+        self.model = model
+        self.smcfg = smcfg
+        self.tc = tc
+        self.sampler = sampler
+        self.eval_fn = eval_fn
+        self.lr_fn = make_lr_fn(tc)
+        self.round_fn = jax.jit(slowmo.make_slowmo_round(smcfg, model.loss_fn))
+        self.history: list[dict] = []
+
+    def init_state(self, key=None) -> SlowMoState:
+        params = self.model.init(key or jax.random.PRNGKey(0))
+        return slowmo.init_slowmo(self.smcfg, params)
+
+    def _batches(self, round_idx: int) -> PyTree:
+        raw = self.sampler(
+            round_idx, self.smcfg.tau, self.tc.per_worker_batch, self.tc.seq_len
+        )
+        if isinstance(raw, dict):
+            return raw
+        return {"tokens": raw}
+
+    def run(self, state: Optional[SlowMoState] = None, rounds: Optional[int] = None):
+        state = state or self.init_state()
+        rounds = rounds or self.tc.total_rounds
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            lr = self.lr_fn(r)
+            batches = self._batches(r)
+            state, metrics = self.round_fn(state, batches, lr)
+            rec = {
+                "round": r,
+                "inner_steps": (r + 1) * self.smcfg.tau,
+                "loss": float(metrics["loss"]),
+                "lr": float(lr),
+                "wall_s": time.perf_counter() - t0,
+            }
+            if "drift" in metrics:
+                rec["drift"] = float(metrics["drift"])
+            if self.eval_fn and (r % max(self.tc.log_every, 1) == 0 or r == rounds - 1):
+                rec["eval"] = float(self.eval_fn(_eval_params(self.smcfg, state)))
+            self.history.append(rec)
+            if self.tc.log_every and r % self.tc.log_every == 0:
+                drift = f" drift={rec.get('drift', float('nan')):.3e}" if "drift" in rec else ""
+                ev = f" eval={rec['eval']:.4f}" if "eval" in rec else ""
+                print(
+                    f"round {r:4d} step {rec['inner_steps']:6d} "
+                    f"loss {rec['loss']:.4f} lr {rec['lr']:.2e}{drift}{ev}"
+                )
+            if self.tc.ckpt_every and self.tc.ckpt_path and (r + 1) % self.tc.ckpt_every == 0:
+                ckpt_lib.save(self.tc.ckpt_path, state, step=r + 1)
+        return state
+
+
+def _eval_params(smcfg: SlowMoConfig, state: SlowMoState) -> PyTree:
+    """Evaluation parameters: the synchronized outer iterate x_{t,0} (or the
+    worker-mean for the noaverage variant)."""
+    if smcfg.exact_average:
+        return state.outer_params
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.outer_params)
+
+
+def final_loss(history: list[dict]) -> float:
+    return history[-1]["loss"] if history else float("nan")
+
+
+def best_loss(history: list[dict]) -> float:
+    return min(h["loss"] for h in history) if history else float("nan")

@@ -1,0 +1,13 @@
+"""Shared test config.
+
+IMPORTANT: do NOT set XLA_FLAGS / host-device-count here — smoke tests and
+benchmarks must see the single real CPU device.  Dry-run tests that need many
+placeholder devices run dryrun.py in a subprocess (see test_dryrun.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,220 @@
+"""Unit tests for the SlowMo framework: Algorithm 1 math and the exact
+special-case equivalences claimed in §2 of the paper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import base_opt, slowmo
+
+
+def quad_loss(params, batch):
+    """f_i(x; c) = 0.5 ||x - c||^2 so grad = x - c (analytically checkable)."""
+    return 0.5 * jnp.sum((params["x"] - batch) ** 2)
+
+
+def make_batches(key, tau, W, d):
+    return jax.random.normal(key, (tau, W, d))
+
+
+def run_rounds(cfg, batches_list, lr=0.1, d=8):
+    state = slowmo.init_slowmo(cfg, {"x": jnp.zeros((d,))})
+    round_fn = jax.jit(slowmo.make_slowmo_round(cfg, quad_loss))
+    for b in batches_list:
+        state, metrics = round_fn(state, b, lr)
+    return state, metrics
+
+
+class TestAlgorithm1Math:
+    """Exact agreement with a hand-rolled numpy Algorithm 1 (base = plain SGD)."""
+
+    @pytest.mark.parametrize("beta", [0.0, 0.4, 0.7])
+    @pytest.mark.parametrize("alpha", [1.0, 0.5])
+    def test_matches_numpy_reference(self, beta, alpha):
+        W, tau, d, g, T = 4, 3, 8, 0.1, 3
+        cfg = slowmo.SlowMoConfig(
+            num_workers=W, tau=tau, alpha=alpha, beta=beta, base="local",
+            inner=base_opt.InnerOptConfig(kind="sgd", momentum=0.0),
+        )
+        key = jax.random.PRNGKey(0)
+        batches = [make_batches(jax.random.fold_in(key, t), tau, W, d) for t in range(T)]
+        state, _ = run_rounds(cfg, batches, lr=g, d=d)
+
+        x0 = np.zeros(d)
+        u = np.zeros(d)
+        for t in range(T):
+            x = np.broadcast_to(x0, (W, d)).copy()
+            cs = np.asarray(batches[t])
+            for k in range(tau):
+                x = x - g * (x - cs[k])  # SGD step on 0.5||x-c||^2
+            x_tau = x.mean(0)
+            u = beta * u + (x0 - x_tau) / g
+            x0 = x0 - alpha * g * u
+        np.testing.assert_allclose(np.asarray(state.outer_params["x"]), x0, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(state.params["x"]), np.broadcast_to(x0, (W, d)), rtol=1e-5, atol=1e-6
+        )
+
+    def test_gamma_invariance_of_u_single_step(self):
+        """With tau=1 and SGD base, u_{t+1} = mean gradient independent of gamma
+        (the 1/gamma scaling in Eq. (2) makes the buffer LR-invariant)."""
+        W, d = 4, 8
+        cfg = slowmo.SlowMoConfig(
+            num_workers=W, tau=1, alpha=1.0, beta=0.5, base="local",
+            inner=base_opt.InnerOptConfig(kind="sgd", momentum=0.0),
+        )
+        b = make_batches(jax.random.PRNGKey(3), 1, W, d)
+        us = []
+        for lr in (0.01, 0.1, 1.0):
+            state, _ = run_rounds(cfg, [b], lr=lr, d=d)
+            us.append(np.asarray(state.slow_u["x"]))
+        np.testing.assert_allclose(us[0], us[1], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(us[0], us[2], rtol=1e-5, atol=1e-6)
+        # and it equals the mean gradient at x=0: grad = x - c = -c
+        expected = -np.asarray(b[0]).mean(0)
+        np.testing.assert_allclose(us[0], expected, rtol=1e-5, atol=1e-6)
+
+
+class TestSpecialCases:
+    def test_tau1_recovers_sgd_with_momentum(self):
+        """base=SGD, tau=1, alpha=1, beta>0  ==  large-batch SGD + heavy ball."""
+        W, d, g, beta, T = 4, 8, 0.05, 0.6, 5
+        cfg = slowmo.SlowMoConfig(
+            num_workers=W, tau=1, alpha=1.0, beta=beta, base="local",
+            inner=base_opt.InnerOptConfig(kind="sgd", momentum=0.0),
+        )
+        key = jax.random.PRNGKey(1)
+        batches = [make_batches(jax.random.fold_in(key, t), 1, W, d) for t in range(T)]
+        state, _ = run_rounds(cfg, batches, lr=g, d=d)
+
+        x = np.zeros(d)
+        u = np.zeros(d)
+        for t in range(T):
+            grad = (x - np.asarray(batches[t][0])).mean(0)  # full-batch gradient
+            u = beta * u + grad
+            x = x - g * u
+        np.testing.assert_allclose(np.asarray(state.outer_params["x"]), x, rtol=1e-5, atol=1e-6)
+
+    def test_beta0_alpha1_recovers_local_sgd(self):
+        """beta=0, alpha=1: x_{t+1,0} = x_{t,tau} exactly (Local SGD)."""
+        W, tau, d, g = 4, 4, 8, 0.1
+        cfg = slowmo.SlowMoConfig(
+            num_workers=W, tau=tau, alpha=1.0, beta=0.0, base="local",
+            inner=base_opt.InnerOptConfig(kind="sgd", momentum=0.0),
+        )
+        b = make_batches(jax.random.PRNGKey(2), tau, W, d)
+        state, _ = run_rounds(cfg, [b], lr=g, d=d)
+
+        x = np.zeros((W, d))
+        cs = np.asarray(b)
+        for k in range(tau):
+            x = x - g * (x - cs[k])
+        np.testing.assert_allclose(
+            np.asarray(state.outer_params["x"]), x.mean(0), rtol=1e-5, atol=1e-6
+        )
+
+    def test_lookahead_single_worker(self):
+        """m=1, beta=0: x' = (1-alpha) x0 + alpha x_tau  (Lookahead)."""
+        tau, d, g, alpha = 5, 8, 0.1, 0.5
+        cfg = slowmo.SlowMoConfig(
+            num_workers=1, tau=tau, alpha=alpha, beta=0.0, base="local",
+            inner=base_opt.InnerOptConfig(kind="sgd", momentum=0.0),
+        )
+        b = make_batches(jax.random.PRNGKey(4), tau, 1, d)
+        state, _ = run_rounds(cfg, [b], lr=g, d=d)
+
+        x = np.zeros(d)
+        cs = np.asarray(b)[:, 0]
+        for k in range(tau):
+            x = x - g * (x - cs[k])
+        expected = (1 - alpha) * np.zeros(d) + alpha * x
+        np.testing.assert_allclose(np.asarray(state.outer_params["x"]), expected, rtol=1e-5, atol=1e-6)
+
+    def test_ar_base_keeps_workers_identical(self):
+        W, d = 4, 8
+        cfg = slowmo.preset("ar_sgd", num_workers=W)
+        b = make_batches(jax.random.PRNGKey(5), 1, W, d)
+        state, _ = run_rounds(cfg, [b, b], d=d)
+        p = np.asarray(state.params["x"])
+        for i in range(1, W):
+            np.testing.assert_allclose(p[0], p[i], rtol=1e-6, atol=1e-7)
+
+
+class TestBufferStrategies:
+    def _cfg(self, strategy, kind="sgd"):
+        return slowmo.SlowMoConfig(
+            num_workers=4, tau=3, alpha=1.0, beta=0.5, base="local",
+            inner=base_opt.InnerOptConfig(kind=kind), buffer_strategy=strategy,
+        )
+
+    def test_reset_zeroes_buffers_and_count(self):
+        state, _ = run_rounds(self._cfg("reset", "adam"), [make_batches(jax.random.PRNGKey(6), 3, 4, 8)])
+        assert float(jnp.sum(jnp.abs(state.inner.h["x"]))) == 0.0
+        assert float(jnp.sum(jnp.abs(state.inner.v["x"]))) == 0.0
+        assert int(state.inner.count) == 0
+
+    def test_maintain_keeps_buffers(self):
+        state, _ = run_rounds(self._cfg("maintain", "adam"), [make_batches(jax.random.PRNGKey(6), 3, 4, 8)])
+        assert float(jnp.sum(jnp.abs(state.inner.h["x"]))) > 0.0
+        assert int(state.inner.count) == 3  # l = t*tau + k (Table C.1)
+
+    def test_average_equalizes_buffers_across_workers(self):
+        state, _ = run_rounds(self._cfg("average"), [make_batches(jax.random.PRNGKey(6), 3, 4, 8)])
+        h = np.asarray(state.inner.h["x"])
+        for i in range(1, 4):
+            np.testing.assert_allclose(h[0], h[i], rtol=1e-6, atol=1e-7)
+
+
+class TestNoAverage:
+    def test_outer_state_carries_worker_axis(self):
+        cfg = slowmo.preset("sgp+slowmo-noaverage", num_workers=4, tau=3)
+        state, _ = run_rounds(cfg, [make_batches(jax.random.PRNGKey(7), 3, 4, 8)])
+        assert state.outer_params["x"].shape == (4, 8)
+        assert state.slow_u["x"].shape == (4, 8)
+
+    def test_workers_stay_divergent_without_average(self):
+        cfg = slowmo.preset("sgp+slowmo-noaverage", num_workers=4, tau=3)
+        state, _ = run_rounds(cfg, [make_batches(jax.random.PRNGKey(8), 3, 4, 8)])
+        p = np.asarray(state.params["x"])
+        assert not np.allclose(p[0], p[1])
+
+
+class TestConvergence:
+    def test_slowmo_converges_on_quadratic(self):
+        """Sanity check of Theorem 1's conclusion: gradient norm shrinks."""
+        W, tau, d = 8, 4, 16
+        cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=tau, beta=0.6)
+        key = jax.random.PRNGKey(9)
+        centers = jax.random.normal(key, (W, d))  # worker-specific optima (zeta > 0)
+        state = slowmo.init_slowmo(cfg, {"x": jnp.zeros((d,))})
+        round_fn = jax.jit(slowmo.make_slowmo_round(cfg, quad_loss))
+        opt = np.asarray(centers).mean(0)  # global optimum of f = mean f_i
+        dists = []
+        for t in range(30):
+            b = jnp.broadcast_to(centers, (tau, W, d))  # deterministic grads
+            state, m = round_fn(state, b, 0.1)
+            dists.append(float(np.linalg.norm(np.asarray(state.outer_params["x"]) - opt)))
+        # distance to the stationary point must shrink strongly (Theorem 1)
+        assert dists[-1] < dists[0] * 0.1
+        np.testing.assert_allclose(np.asarray(state.outer_params["x"]), opt, atol=0.05)
+
+    def test_slowmo_beats_local_sgd_same_steps(self):
+        """Paper's headline claim, miniature: SlowMo achieves lower loss than
+        plain Local SGD after the same number of rounds on a noisy quadratic."""
+        W, tau, d, T = 8, 6, 32, 15
+        key = jax.random.PRNGKey(10)
+        centers = jax.random.normal(key, (W, d)) * 0.1
+        noise = jax.random.normal(jax.random.fold_in(key, 1), (T, tau, W, d)) * 0.2
+
+        def final_loss(cfg):
+            state = slowmo.init_slowmo(cfg, {"x": jnp.full((d,), 3.0)})
+            round_fn = jax.jit(slowmo.make_slowmo_round(cfg, quad_loss))
+            for t in range(T):
+                b = centers[None] + noise[t]
+                state, m = round_fn(state, b, 0.005)
+            x = np.asarray(state.outer_params["x"])
+            return float(0.5 * np.sum((x - np.asarray(centers).mean(0)) ** 2))
+
+        base = final_loss(slowmo.preset("local_sgd", num_workers=W, tau=tau))
+        slow = final_loss(slowmo.preset("local_sgd+slowmo", num_workers=W, tau=tau, beta=0.6))
+        assert slow < base

@@ -1,0 +1,113 @@
+"""Tests for the decentralized base algorithms (topology + gossip mixing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gossip, topology
+
+
+class TestTopology:
+    @given(m=st.integers(2, 64), k=st.integers(0, 20))
+    @settings(max_examples=50, deadline=None)
+    def test_exponential_mixing_matrix_column_stochastic(self, m, k):
+        P = topology.mixing_matrix_exponential(m, k)
+        np.testing.assert_allclose(P.sum(axis=0), np.ones(m), atol=1e-12)
+
+    @given(m=st.integers(1, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_ring_doubly_stochastic(self, m):
+        P = topology.mixing_matrix_ring(m)
+        np.testing.assert_allclose(P.sum(axis=0), np.ones(m), atol=1e-12)
+        np.testing.assert_allclose(P.sum(axis=1), np.ones(m), atol=1e-12)
+
+    def test_exponential_hops(self):
+        assert topology.exponential_hops(8) == [1, 2, 4]
+        assert topology.exponential_hops(16) == [1, 2, 4, 8]
+        assert topology.exponential_hops(1) == [0]
+
+
+class TestGossipMixing:
+    def _params(self, key, W, d=16):
+        return {"w1": jax.random.normal(key, (W, d)), "w2": jax.random.normal(jax.random.fold_in(key, 1), (W, 4, 4))}
+
+    @pytest.mark.parametrize("kind", ["sgp", "dpsgd"])
+    def test_mass_preservation(self, kind):
+        """Push-sum preserves total mass sum_i x_i (column-stochastic P)."""
+        W = 8
+        cfg = gossip.GossipConfig(kind=kind, num_workers=W)
+        params = self._params(jax.random.PRNGKey(0), W)
+        state = gossip.init_gossip_state(cfg, params)
+        total0 = {k: np.asarray(v).sum(0) for k, v in params.items()}
+        for k in range(7):
+            params, state = gossip.mix(cfg, state, params, jnp.int32(k))
+        for key_, v in params.items():
+            np.testing.assert_allclose(np.asarray(v).sum(0), total0[key_], rtol=1e-4, atol=1e-5)
+
+    def test_sgp_matches_mixing_matrix(self):
+        """roll-based SGP mix == multiplication by the column-stochastic P_k."""
+        W = 8
+        cfg = gossip.GossipConfig(kind="sgp", num_workers=W)
+        params = self._params(jax.random.PRNGKey(1), W)
+        state = gossip.init_gossip_state(cfg, params)
+        x = np.asarray(params["w1"])
+        for k in range(5):
+            params, state = gossip.mix(cfg, state, params, jnp.int32(k))
+            P = topology.mixing_matrix_exponential(W, k)
+            x = P @ x
+            np.testing.assert_allclose(np.asarray(params["w1"]), x, rtol=1e-5, atol=1e-6)
+
+    def test_sgp_weights_stay_one_on_regular_graph(self):
+        """In/out-degree-regular exponential graph => push-sum weights == 1."""
+        W = 16
+        cfg = gossip.GossipConfig(kind="sgp", num_workers=W)
+        params = self._params(jax.random.PRNGKey(2), W)
+        state = gossip.init_gossip_state(cfg, params)
+        for k in range(9):
+            params, state = gossip.mix(cfg, state, params, jnp.int32(k))
+            np.testing.assert_allclose(np.asarray(state.w), np.ones(W), atol=1e-6)
+
+    def test_sgp_consensus(self):
+        """Repeated gossip converges every worker to the initial average."""
+        W = 8
+        cfg = gossip.GossipConfig(kind="sgp", num_workers=W)
+        params = self._params(jax.random.PRNGKey(3), W)
+        target = np.asarray(params["w1"]).mean(0)
+        state = gossip.init_gossip_state(cfg, params)
+        for k in range(60):
+            params, state = gossip.mix(cfg, state, params, jnp.int32(k))
+        z = gossip.debias(params, state.w)
+        np.testing.assert_allclose(np.asarray(z["w1"]), np.broadcast_to(target, (W,) + target.shape), atol=1e-4)
+
+    def test_dpsgd_preserves_mean_exactly(self):
+        W = 8
+        cfg = gossip.GossipConfig(kind="dpsgd", num_workers=W)
+        params = self._params(jax.random.PRNGKey(4), W)
+        mean0 = np.asarray(params["w1"]).mean(0)
+        state = gossip.init_gossip_state(cfg, params)
+        for k in range(10):
+            params, state = gossip.mix(cfg, state, params, jnp.int32(k))
+        np.testing.assert_allclose(np.asarray(params["w1"]).mean(0), mean0, rtol=1e-5)
+
+    def test_osgp_uses_stale_messages(self):
+        """OSGP mixes in the message from the previous round (1-step delay):
+        after a single mix, a worker's value includes its peer's *initial*
+        half (the stale init), not the peer's current half."""
+        W = 4
+        cfg = gossip.GossipConfig(kind="osgp", num_workers=W)
+        params = {"x": jnp.arange(W, dtype=jnp.float32).reshape(W, 1)}
+        state = gossip.init_gossip_state(cfg, params)
+        mixed, state = gossip.mix(cfg, state, params, jnp.int32(0))
+        # hop=1 at step 0: x_i' = 0.5*x_i + stale_{i-1} where stale = 0.5*x_init
+        expected = 0.5 * np.arange(W) + 0.5 * np.roll(np.arange(W), 1)
+        np.testing.assert_allclose(np.asarray(mixed["x"]).ravel(), expected, atol=1e-6)
+        # total mass still preserved
+        np.testing.assert_allclose(np.asarray(mixed["x"]).sum() + 0, np.arange(W).sum(), atol=1e-5)
+
+    def test_single_worker_mix_is_identity(self):
+        cfg = gossip.GossipConfig(kind="sgp", num_workers=1)
+        params = {"x": jnp.ones((1, 3))}
+        state = gossip.init_gossip_state(cfg, params)
+        mixed, _ = gossip.mix(cfg, state, params, jnp.int32(0))
+        np.testing.assert_allclose(np.asarray(mixed["x"]), np.ones((1, 3)))

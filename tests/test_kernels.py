@@ -1,0 +1,134 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests on the math."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import fused_nesterov as fn
+from repro.kernels import ops, ref
+from repro.kernels import slowmo_update as su
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+class TestSlowMoUpdateKernel:
+    @pytest.mark.parametrize("rows", [8, 64, 256, 512])
+    @pytest.mark.parametrize("beta", [0.0, 0.6, 0.95])
+    def test_matches_ref_2d(self, rows, beta):
+        shape = (rows, su.LANES)
+        x0, xt, u = rnd(0, shape), rnd(1, shape), rnd(2, shape)
+        br = min(rows, 64)
+        x_k, u_k = su.slowmo_update_2d(
+            x0, xt, u, jnp.float32(0.05), alpha=1.0, beta=beta,
+            block_rows=br, interpret=True,
+        )
+        x_r, u_r = ref.slowmo_outer_update_ref(x0, xt, u, gamma=0.05, alpha=1.0, beta=beta)
+        np.testing.assert_allclose(np.asarray(x_k), np.asarray(x_r), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize(
+        "shapes", [[(3,)], [(5, 7), (130,)], [(2, 3, 5), (1025,), (4096,)]]
+    )
+    def test_pytree_wrapper_ragged_shapes(self, shapes):
+        x0 = {f"p{i}": rnd(i, s) for i, s in enumerate(shapes)}
+        xt = {f"p{i}": rnd(i + 10, s) for i, s in enumerate(shapes)}
+        u = {f"p{i}": rnd(i + 20, s) for i, s in enumerate(shapes)}
+        xk, uk = ops.slowmo_outer_update(x0, xt, u, gamma=0.1, alpha=0.5, beta=0.7, use_pallas=True)
+        xr, ur = ops.slowmo_outer_update(x0, xt, u, gamma=0.1, alpha=0.5, beta=0.7, use_pallas=False)
+        for k in x0:
+            np.testing.assert_allclose(np.asarray(xk[k]), np.asarray(xr[k]), rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(uk[k]), np.asarray(ur[k]), rtol=1e-6, atol=1e-6)
+
+    @given(
+        gamma=st.floats(1e-4, 2.0),
+        alpha=st.floats(0.1, 1.0),
+        beta=st.floats(0.0, 0.99),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_beta0_alpha1_returns_xtau(self, gamma, alpha, beta):
+        """beta=0, alpha=1 => x' = x_tau exactly (Local SGD recovery), and the
+        general update is linear in (x0, x_tau, u)."""
+        shape = (4, 16)
+        x0, xt, u = rnd(0, shape), rnd(1, shape), rnd(2, shape)
+        x_new, u_new = ref.slowmo_outer_update_ref(x0, xt, u, gamma=gamma, alpha=1.0, beta=0.0)
+        np.testing.assert_allclose(np.asarray(x_new), np.asarray(xt), rtol=1e-5, atol=1e-6)
+        # linearity: scaling all inputs by c scales both outputs by c
+        c = 3.0
+        xs, us = ref.slowmo_outer_update_ref(c * x0, c * xt, c * u, gamma=gamma, alpha=alpha, beta=beta)
+        x1, u1 = ref.slowmo_outer_update_ref(x0, xt, u, gamma=gamma, alpha=alpha, beta=beta)
+        np.testing.assert_allclose(np.asarray(xs), c * np.asarray(x1), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(us), c * np.asarray(u1), rtol=1e-4, atol=1e-5)
+
+
+class TestFusedNesterovKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("wd", [0.0, 1e-2])
+    def test_matches_ref(self, dtype, wd):
+        shape = (16, fn.LANES)
+        x = rnd(0, shape, dtype)
+        h = rnd(1, shape)
+        g = rnd(2, shape, dtype)
+        xk, hk = fn.fused_nesterov_2d(
+            x, h, g, jnp.float32(0.1), momentum=0.9, weight_decay=wd,
+            block_rows=8, interpret=True,
+        )
+        xr, hr = ref.fused_nesterov_ref(x, h, g, lr=0.1, momentum=0.9, weight_decay=wd)
+        np.testing.assert_allclose(
+            np.asarray(xk, np.float32), np.asarray(xr, np.float32), rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6, atol=1e-5
+        )
+        np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "B,S,Hq,Hkv,D",
+        [
+            (1, 128, 4, 4, 64),  # MHA
+            (2, 256, 8, 2, 64),  # GQA 4:1
+            (1, 200, 4, 1, 80),  # ragged seq + MQA + non-128 head dim
+            (1, 384, 8, 8, 128),
+        ],
+    )
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref_self_attention(self, B, S, Hq, Hkv, D, causal):
+        q = rnd(0, (B, S, Hq, D))
+        k = rnd(1, (B, S, Hkv, D))
+        v = rnd(2, (B, S, Hkv, D))
+        out_k = fa.flash_attention(q, k, v, causal=causal, block_q=128, block_k=128, interpret=True)
+        out_r = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [64, 128])
+    def test_sliding_window(self, window):
+        B, S, H, D = 1, 320, 4, 64
+        q, k, v = rnd(0, (B, S, H, D)), rnd(1, (B, S, H, D)), rnd(2, (B, S, H, D))
+        out_k = fa.flash_attention(q, k, v, causal=True, window=window, interpret=True)
+        out_r = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=2e-4, atol=2e-4)
+
+    def test_bfloat16(self):
+        B, S, H, D = 1, 256, 4, 64
+        q = rnd(0, (B, S, H, D), jnp.bfloat16)
+        k = rnd(1, (B, S, H, D), jnp.bfloat16)
+        v = rnd(2, (B, S, H, D), jnp.bfloat16)
+        out_k = fa.flash_attention(q, k, v, causal=True, interpret=True)
+        out_r = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out_k, np.float32), np.asarray(out_r, np.float32), rtol=3e-2, atol=3e-2
+        )
+
+    def test_row_sums_to_convex_combination(self):
+        """Attention output rows lie in the convex hull of V rows: with V = const
+        vector c, output must equal c everywhere (softmax weights sum to 1)."""
+        B, S, H, D = 1, 256, 2, 64
+        q, k = rnd(0, (B, S, H, D)), rnd(1, (B, S, H, D))
+        v = jnp.ones((B, S, H, D)) * 2.5
+        out = fa.flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 2.5 * np.ones_like(out), rtol=1e-5)
