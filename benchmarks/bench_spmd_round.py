@@ -1,0 +1,88 @@
+"""Round-latency benchmark: shard_map mesh path vs the array-axis oracle.
+
+Measures wall-clock per SlowMo round for both execution backends on the same
+host, using 8 forced host-CPU devices for the mesh path (set BEFORE the jax
+import — this is the standard recipe, see repro/distributed/spmd.py).  On a
+single CPU the mesh path mostly pays shard_map orchestration overhead; the
+point of the benchmark is (a) a regression gate for that overhead and (b) the
+harness that, on a real multi-chip slice, measures the actual collective cost
+the paper's tau amortizes.
+
+    PYTHONPATH=src python benchmarks/bench_spmd_round.py [--workers 8] [--tau 12]
+"""
+import argparse
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import slowmo  # noqa: E402
+from repro.distributed import spmd  # noqa: E402
+from repro.launch.mesh import make_spmd_layout  # noqa: E402
+
+
+def make_problem(W: int, tau: int, d: int = 256, B: int = 8):
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"])
+        return jnp.mean((h @ params["w2"] - batch["y"]) ** 2)
+
+    k = jax.random.PRNGKey(0)
+    params0 = {
+        "w1": 0.1 * jax.random.normal(k, (d, d)),
+        "w2": 0.1 * jax.random.normal(jax.random.fold_in(k, 1), (d, 1)),
+    }
+    kb = jax.random.PRNGKey(1)
+    batches = {
+        "x": jax.random.normal(kb, (tau, W, B, d)),
+        "y": jnp.zeros((tau, W, B, 1)),
+    }
+    return loss_fn, params0, batches
+
+
+def time_fn(fn, state, batches, iters=20, warmup=3):
+    for _ in range(warmup):
+        state, m = fn(state, batches, 0.05)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, m = fn(state, batches, 0.05)
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=12)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args()
+
+    W = args.workers
+    loss_fn, params0, batches = make_problem(W, args.tau, args.dim)
+    layout = make_spmd_layout(W)
+    print(f"workers={W} tau={args.tau} d={args.dim} devices={len(jax.devices())}")
+
+    for preset in ("local_sgd+slowmo", "sgp+slowmo", "ar_sgd"):
+        cfg = slowmo.preset(preset, num_workers=W, tau=args.tau)
+        b = batches if cfg.tau == args.tau else jax.tree.map(
+            lambda x: x[: cfg.tau], batches
+        )
+        state = slowmo.init_slowmo(cfg, params0)
+        t_axis = time_fn(
+            jax.jit(slowmo.make_slowmo_round(cfg, loss_fn)), state, b, args.iters
+        )
+        t_mesh = time_fn(
+            spmd.make_spmd_slowmo_round(cfg, loss_fn, layout), state, b, args.iters
+        )
+        print(
+            f"{preset:20s} axis {t_axis * 1e3:8.2f} ms/round   "
+            f"mesh {t_mesh * 1e3:8.2f} ms/round   mesh/axis {t_mesh / t_axis:5.2f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """SlowMo core: the paper's contribution as a composable JAX module."""
 from .base_opt import InnerOptConfig, InnerOptState, init_inner_state, update_direction
+from .comm import AxisBackend, CommBackend, MeshBackend
 from .gossip import GossipConfig, GossipState
 from .slowmo import (
     SlowMoConfig,

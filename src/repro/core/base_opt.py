@@ -131,21 +131,23 @@ def reset_buffers(cfg: InnerOptConfig, state: InnerOptState) -> InnerOptState:
     )
 
 
-def average_buffers(state: InnerOptState, worker_axis: int = 0) -> InnerOptState:
+def average_buffers(
+    state: InnerOptState, backend=None
+) -> InnerOptState:
     """Buffer strategy 'average': ALLREDUCE the buffers across workers.
 
-    The buffers carry a leading worker axis; averaging over it lowers to an
-    all-reduce on the mesh axes that shard the worker axis.
+    The buffers carry a leading worker axis; averaging over it is a plain
+    array mean on the axis backend and an ``all-reduce`` (``lax.pmean``) on
+    the mesh backend.  Scalar placeholder leaves are left untouched.
     """
+    if backend is None:
+        from . import comm
 
-    def avg(x):
-        if x.ndim == 0:
-            return x
-        m = jnp.mean(x, axis=worker_axis, keepdims=True)
-        return jnp.broadcast_to(m, x.shape)
+        wleaves = [x for x in jax.tree.leaves(state.h) if getattr(x, "ndim", 0)]
+        backend = comm.AxisBackend(int(wleaves[0].shape[0]) if wleaves else 1)
 
     return InnerOptState(
-        h=jax.tree.map(avg, state.h),
-        v=jax.tree.map(avg, state.v),
+        h=jax.tree.map(backend.mean_keepdims, state.h),
+        v=jax.tree.map(backend.mean_keepdims, state.v),
         count=state.count,
     )

@@ -1,0 +1,171 @@
+"""Communication backends: how worker-axis collectives actually execute.
+
+The SlowMo round is written once against a small ``CommBackend`` seam and can
+run in two modes:
+
+* ``AxisBackend`` ("axis") — the oracle: the m workers are a leading array
+  axis of every leaf, and collectives are plain array ops (``jnp.mean`` over
+  axis 0, ``jnp.roll`` along axis 0).  Single-program, single-device; this is
+  the layout the rest of the repo (init, checkpoints, benchmarks) speaks.
+
+* ``MeshBackend`` ("mesh") — the lowered path: the round body runs inside
+  ``jax.experimental.shard_map`` with the worker axis sharded over one or
+  more mesh axes.  The exact average becomes ``jax.lax.pmean`` (lowers to an
+  ``all-reduce``), and gossip/topology rolls become ``jax.lax.ppermute``
+  (lower to ``collective-permute``).  Leaves keep a leading *local* worker
+  axis of size ``num_workers // num_worker_devices`` (1 in the one-worker-
+  per-device layouts), so the algorithm code is identical in both modes.
+
+Both backends implement the same five primitives; everything else in
+``slowmo.py`` / ``gossip.py`` / ``base_opt.py`` is backend-agnostic.  See
+``repro.distributed.spmd`` for the shard_map wrapper that pairs the
+``MeshBackend`` with PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import topology
+
+PyTree = Any
+
+
+class AxisBackend:
+    """Array-axis oracle: workers = leading axis 0 of every leaf."""
+
+    kind = "axis"
+
+    def __init__(self, num_workers: int):
+        self.num_workers = num_workers
+
+    @property
+    def local_workers(self) -> int:
+        return self.num_workers
+
+    # -- reductions ---------------------------------------------------------
+    def pmean_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Mean over workers of an already-locally-averaged scalar."""
+        return x
+
+    def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Sum over workers of a per-shard scalar."""
+        return x
+
+    def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
+        """Exact average over the worker axis; drops the leading axis.
+
+        ``dtype`` controls the precision OF THE COLLECTIVE (a §Perf knob:
+        bf16 halves boundary traffic); the result is fp32 either way."""
+
+        def avg(x):
+            acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+            return jnp.mean(acc, axis=0).astype(jnp.float32)
+
+        return jax.tree.map(avg, tree)
+
+    def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Every worker slot replaced by the mean; shape preserved."""
+        if x.ndim == 0:
+            return x
+        return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
+
+    # -- broadcast / permute ------------------------------------------------
+    def bcast(self, tree: PyTree, dtype) -> PyTree:
+        """Attach a (replicated) leading worker axis."""
+        W = self.num_workers
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None].astype(dtype), (W,) + x.shape),
+            tree,
+        )
+
+    def roll(self, x: jnp.ndarray, hop: int) -> jnp.ndarray:
+        """Roll along the worker axis: slot i receives from (i - hop) % m."""
+        return jnp.roll(x, hop, axis=0)
+
+    def roll_tree(self, tree: PyTree, hop: int) -> PyTree:
+        return jax.tree.map(lambda x: self.roll(x, hop), tree)
+
+
+class MeshBackend:
+    """shard_map collectives: workers sharded over ``axis_names`` mesh axes.
+
+    Only valid INSIDE a ``shard_map`` over a mesh carrying ``axis_names``.
+    Rolls require one worker per device along the worker axes (local worker
+    axis of size 1); pure-averaging bases (local/ar) also work with several
+    workers per device.
+    """
+
+    kind = "mesh"
+
+    def __init__(self, axis_names: tuple[str, ...], num_workers: int, num_devices: int):
+        if num_workers % num_devices:
+            raise ValueError(
+                f"num_workers={num_workers} not divisible by the "
+                f"{num_devices} devices of worker axes {axis_names}"
+            )
+        self.axis_names = tuple(axis_names)
+        self.num_workers = num_workers
+        self.num_devices = num_devices
+        # jax collectives accept a single name or a tuple of names (the
+        # flattened, row-major index over the named axes).
+        self.axis_entry = (
+            self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
+        )
+
+    @property
+    def local_workers(self) -> int:
+        return self.num_workers // self.num_devices
+
+    # -- reductions ---------------------------------------------------------
+    def pmean_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.pmean(x, self.axis_entry)
+
+    def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.psum(x, self.axis_entry)
+
+    def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
+        def avg(x):
+            acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+            # local mean over the (equal-size) local worker axis, then the
+            # cross-device mean — lowers to an all-reduce over the mesh axes.
+            return jax.lax.pmean(jnp.mean(acc, axis=0), self.axis_entry).astype(
+                jnp.float32
+            )
+
+        return jax.tree.map(avg, tree)
+
+    def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
+        if x.ndim == 0:
+            return x
+        m = jnp.mean(x, axis=0, keepdims=True)
+        return jnp.broadcast_to(jax.lax.pmean(m, self.axis_entry), x.shape)
+
+    # -- broadcast / permute ------------------------------------------------
+    def bcast(self, tree: PyTree, dtype) -> PyTree:
+        L = self.local_workers
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None].astype(dtype), (L,) + x.shape),
+            tree,
+        )
+
+    def roll(self, x: jnp.ndarray, hop: int) -> jnp.ndarray:
+        if self.local_workers != 1:
+            raise ValueError(
+                "mesh rolls need one worker per device "
+                f"(local_workers={self.local_workers})"
+            )
+        perm = topology.ppermute_perm(self.num_devices, hop)
+        return jax.lax.ppermute(x, self.axis_entry, perm)
+
+    def roll_tree(self, tree: PyTree, hop: int) -> PyTree:
+        return jax.tree.map(lambda x: self.roll(x, hop), tree)
+
+
+CommBackend = AxisBackend | MeshBackend
+
+
+def default_backend(num_workers: int) -> AxisBackend:
+    return AxisBackend(num_workers)

@@ -24,7 +24,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import topology
+from . import comm, topology
 
 PyTree = Any
 
@@ -45,8 +45,13 @@ class GossipConfig:
             raise ValueError(f"unknown gossip kind: {self.kind!r}")
 
 
-def init_gossip_state(cfg: GossipConfig, params: PyTree) -> GossipState:
-    W = cfg.num_workers
+def init_gossip_state(
+    cfg: GossipConfig, params: PyTree, *, num_workers: int | None = None
+) -> GossipState:
+    """``num_workers`` overrides the width of the ``w`` vector — the mesh
+    backend re-initializes inside shard_map where leaves are per-device
+    shards (local worker axis), not the full global worker axis."""
+    W = num_workers if num_workers is not None else cfg.num_workers
     w = jnp.ones((W,), jnp.float32)
     if cfg.kind == "osgp":
         stale = jax.tree.map(lambda x: 0.5 * x.astype(jnp.float32), params)
@@ -67,16 +72,19 @@ def debias(x: PyTree, w: jnp.ndarray) -> PyTree:
     return jax.tree.map(lambda a: a / _wexpand(w, a).astype(a.dtype), x)
 
 
-def _switch_roll(tree_and_w, hops: list[int]):
-    """Return a fn(step) that rolls (tree, w) by hops[step % len(hops)]."""
+def _switch_roll(tree_and_w, hops: list[int], backend: comm.CommBackend):
+    """Return a fn(step) that rolls (tree, w) by hops[step % len(hops)].
+
+    Each branch holds a *static* hop, so on the mesh backend every branch is
+    a static ``collective-permute``."""
 
     tree, w = tree_and_w
 
     def make_branch(h):
         def branch(_):
             return (
-                topology.roll_workers(tree, h),
-                jnp.roll(w, h),
+                backend.roll_tree(tree, h),
+                backend.roll(w, h),
             )
 
         return branch
@@ -96,20 +104,22 @@ def mix(
     state: GossipState,
     params: PyTree,
     step: jnp.ndarray,
+    backend: comm.CommBackend | None = None,
 ) -> tuple[PyTree, GossipState]:
     """One gossip round: mix parameter copies along the worker axis.
 
-    ``params`` leaves have leading worker axis W.  Returns mixed params and
-    the updated gossip state.
+    ``params`` leaves have leading worker axis W (local shard of it on the
+    mesh backend).  Returns mixed params and the updated gossip state.
     """
     W = cfg.num_workers
+    backend = backend or comm.AxisBackend(W)
     if cfg.kind == "none" or W == 1:
         return params, state
 
     if cfg.kind == "dpsgd":
         # Symmetric ring, doubly stochastic: x' = (x + x_prev + x_next) / 3.
         def ring(x):
-            return (x + jnp.roll(x, 1, axis=0) + jnp.roll(x, -1, axis=0)) / 3.0
+            return (x + backend.roll(x, 1) + backend.roll(x, -1)) / 3.0
 
         return jax.tree.map(ring, params), state
 
@@ -119,7 +129,7 @@ def mix(
         # Keep half, receive the half pushed by the peer `hop` behind.
         half = jax.tree.map(lambda x: 0.5 * x, params)
         half_w = 0.5 * state.w
-        rolled, rolled_w = _switch_roll((half, half_w), hops)(step)
+        rolled, rolled_w = _switch_roll((half, half_w), hops, backend)(step)
         mixed = jax.tree.map(lambda a, b: a + b.astype(a.dtype), half, rolled)
         new_w = half_w + rolled_w
         return mixed, GossipState(w=new_w, stale=state.stale, stale_w=state.stale_w)
@@ -127,7 +137,7 @@ def mix(
     # osgp: mix in the *stale* message (sent by the peer one round ago).
     half = jax.tree.map(lambda x: (0.5 * x).astype(jnp.float32), params)
     half_w = 0.5 * state.w
-    rolled, rolled_w = _switch_roll((state.stale, state.stale_w), hops)(step)
+    rolled, rolled_w = _switch_roll((state.stale, state.stale_w), hops, backend)(step)
     mixed = jax.tree.map(
         lambda p, a, b: (a + b).astype(p.dtype), params, half, rolled
     )

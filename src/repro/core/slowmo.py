@@ -11,7 +11,17 @@ One jitted **round** = ``tau`` base-optimizer steps + (optional) exact average
 The m workers live on a leading array axis of every parameter leaf; on the
 production mesh that axis is sharded over the ``data`` (and ``pod``) mesh
 axes, so the exact average lowers to an all-reduce and gossip lowers to
-collective-permutes.  Recovered special cases (tested):
+collective-permutes.
+
+All worker-axis communication goes through the ``CommBackend`` seam
+(``repro.core.comm``): the default ``AxisBackend`` executes collectives as
+plain array ops on the leading axis (single-device oracle), while the
+``MeshBackend`` — driven by ``repro.distributed.spmd.make_spmd_slowmo_round``
+— runs the same round body inside ``shard_map`` with ``lax.pmean`` /
+``lax.ppermute`` over real mesh axes.  To exercise the mesh path on a
+CPU-only host, set ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+BEFORE importing jax (see tests/test_spmd.py).  Recovered special cases
+(tested):
 
 * base='local', tau=1, alpha=1, beta>0 ........ large-batch SGD + momentum
 * base='local', tau>1, alpha=1, beta=0 ........ Local SGD
@@ -28,7 +38,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import base_opt, gossip
+from . import base_opt, comm, gossip
 from .base_opt import InnerOptConfig, InnerOptState
 from .gossip import GossipConfig, GossipState
 
@@ -110,14 +120,18 @@ def init_slowmo(cfg: SlowMoConfig, params0: PyTree) -> SlowMoState:
 
 
 def make_inner_step(
-    cfg: SlowMoConfig, loss_fn: Callable[[PyTree, PyTree], jnp.ndarray]
+    cfg: SlowMoConfig,
+    loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+    backend: comm.CommBackend | None = None,
 ):
     """Build one base-optimizer step over all W workers.
 
     ``loss_fn(params_one_worker, batch_one_worker) -> scalar loss``.
     Returns ``step_fn((params, inner, gossip_state, step), batch) ->
-    (carry, mean_loss)`` where batch leaves have leading worker axis W.
+    (carry, mean_loss)`` where batch leaves have leading worker axis W
+    (its local shard on the mesh backend).
     """
+    backend = backend or comm.AxisBackend(cfg.num_workers)
     vgrad = jax.vmap(jax.value_and_grad(loss_fn))
     gcfg = cfg.gossip_config
 
@@ -131,49 +145,38 @@ def make_inner_step(
         losses, grads = vgrad(z, batch)
         if cfg.base == "ar":
             # ALLREDUCE baseline: average gradients across workers every step.
-            grads = jax.tree.map(
-                lambda g: jnp.broadcast_to(
-                    jnp.mean(g, axis=0, keepdims=True), g.shape
-                ),
-                grads,
-            )
+            grads = jax.tree.map(backend.mean_keepdims, grads)
         d, inner = base_opt.update_direction(cfg.inner, inner, z, grads)
         params = jax.tree.map(
             lambda x, dd: (x.astype(jnp.float32) - lr * dd).astype(x.dtype),
             params,
             d,
         )
-        params, gstate = gossip.mix(gcfg, gstate, params, step)
-        return (params, inner, gstate, step + 1), jnp.mean(losses)
+        params, gstate = gossip.mix(gcfg, gstate, params, step, backend)
+        loss = backend.pmean_scalar(jnp.mean(losses))
+        return (params, inner, gstate, step + 1), loss
 
     return step_fn
 
 
-def _worker_mean(tree: PyTree, dtype=None) -> PyTree:
-    """Exact average over the worker axis (lowers to all-reduce on the mesh).
-
-    ``dtype`` controls the precision OF THE COLLECTIVE (a §Perf knob: bf16
-    halves boundary traffic); the result is returned in fp32 either way."""
-    def avg(x):
-        acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
-        return jnp.mean(acc, axis=0).astype(jnp.float32)
-
-    return jax.tree.map(avg, tree)
-
-
-def outer_update(cfg: SlowMoConfig, state: SlowMoState, lr) -> SlowMoState:
+def outer_update(
+    cfg: SlowMoConfig,
+    state: SlowMoState,
+    lr,
+    backend: comm.CommBackend | None = None,
+) -> SlowMoState:
     """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2)."""
     from ..kernels import ops as kops  # local import: kernels are optional
 
-    W = cfg.num_workers
+    backend = backend or comm.AxisBackend(cfg.num_workers)
     if cfg.exact_average:
         # Line 6: exact average over the worker axis -> all-reduce.
         if cfg.gossip_config.kind in ("sgp", "osgp"):
-            x_tau = _worker_mean(
+            x_tau = backend.worker_mean(
                 gossip.debias(state.params, state.gossip.w), cfg.average_dtype
             )
         else:
-            x_tau = _worker_mean(state.params, cfg.average_dtype)
+            x_tau = backend.worker_mean(state.params, cfg.average_dtype)
     else:
         # noaverage (§6): skip line 6; each worker applies the slow update
         # to its own drift (outer state carries the worker axis).
@@ -196,7 +199,7 @@ def outer_update(cfg: SlowMoConfig, state: SlowMoState, lr) -> SlowMoState:
     )
 
     if cfg.exact_average:
-        new_params = _bcast_workers(new_outer, W, cfg.param_dtype)
+        new_params = backend.bcast(new_outer, cfg.param_dtype)
     else:
         new_params = jax.tree.map(
             lambda x: x.astype(cfg.param_dtype), new_outer
@@ -207,12 +210,14 @@ def outer_update(cfg: SlowMoConfig, state: SlowMoState, lr) -> SlowMoState:
     if cfg.buffer_strategy == "reset":
         inner = base_opt.reset_buffers(cfg.inner, inner)
     elif cfg.buffer_strategy == "average":
-        inner = base_opt.average_buffers(inner)
+        inner = base_opt.average_buffers(inner, backend)
 
     # Gossip de-bias weights restart at 1 after an exact average.
     gstate = state.gossip
     if cfg.exact_average and cfg.gossip_config.kind in ("sgp", "osgp"):
-        gstate = gossip.init_gossip_state(cfg.gossip_config, new_params)
+        gstate = gossip.init_gossip_state(
+            cfg.gossip_config, new_params, num_workers=backend.local_workers
+        )
 
     return SlowMoState(
         params=new_params,
@@ -226,15 +231,23 @@ def outer_update(cfg: SlowMoConfig, state: SlowMoState, lr) -> SlowMoState:
 
 
 def make_slowmo_round(
-    cfg: SlowMoConfig, loss_fn: Callable[[PyTree, PyTree], jnp.ndarray]
+    cfg: SlowMoConfig,
+    loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+    backend: comm.CommBackend | None = None,
 ):
     """Build the jittable round function.
 
     ``round_fn(state, batches, lr) -> (state, metrics)`` where every leaf of
     ``batches`` is shaped ``(tau, W, ...)`` and ``lr`` is the (fast) learning
     rate gamma_t used for all tau steps of this round.
+
+    ``backend`` selects how worker collectives execute: the default
+    ``AxisBackend`` runs them on the leading array axis; a ``MeshBackend``
+    (installed by ``repro.distributed.spmd``) runs the identical body under
+    shard_map with real collectives.
     """
-    step_fn = make_inner_step(cfg, loss_fn)
+    backend = backend or comm.AxisBackend(cfg.num_workers)
+    step_fn = make_inner_step(cfg, loss_fn, backend)
 
     def round_fn(state: SlowMoState, batches: PyTree, lr):
         lr = jnp.asarray(lr, jnp.float32)
@@ -267,7 +280,7 @@ def make_slowmo_round(
         )
         metrics = {"loss": loss_sum / cfg.tau}
         if cfg.track_drift:
-            mean_p = _worker_mean(state.params)
+            mean_p = backend.worker_mean(state.params)
             drift = sum(
                 jax.tree.leaves(
                     jax.tree.map(
@@ -279,8 +292,8 @@ def make_slowmo_round(
                     )
                 )
             )
-            metrics["drift"] = drift / cfg.num_workers
-        state = outer_update(cfg, state, lr)
+            metrics["drift"] = backend.psum_scalar(drift) / cfg.num_workers
+        state = outer_update(cfg, state, lr, backend)
         return state, metrics
 
     return round_fn

@@ -69,6 +69,16 @@ def mixing_matrix_ring(m: int) -> np.ndarray:
     return P
 
 
+def ppermute_perm(m: int, hop) -> list[tuple[int, int]]:
+    """(source, dest) pairs realizing ``jnp.roll(x, +hop)`` across m devices.
+
+    Slot ``i`` receives from the peer ``hop`` behind, i.e. source ``j`` sends
+    to ``(j + hop) % m`` — the directed push of the exponential graph, as a
+    ``jax.lax.ppermute`` permutation for the mesh-lowered backend.
+    """
+    return [(j, (j + int(hop)) % m) for j in range(m)]
+
+
 def roll_workers(tree, hop, axis: int = 0):
     """Roll every leaf of ``tree`` along the worker axis by ``hop``.
 

@@ -206,6 +206,53 @@ def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: b
     )
 
 
+def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyTree:
+    """PartitionSpec tree for a SlowMoState entering ``shard_map``.
+
+    Every leaf carrying a leading worker axis is sharded over the layout's
+    worker mesh axes; scalars and (for ``exact_average``) the replicated
+    outer iterate / slow momentum get ``P()``.  ``state`` may be concrete
+    arrays or ``jax.eval_shape`` structs — only structure/ndim are read.
+    """
+    from ..core.base_opt import InnerOptState
+    from ..core.gossip import GossipState
+    from ..core.slowmo import SlowMoState
+
+    wentry = _wax_entry(layout)[0]
+
+    def wspec(leaf):
+        return P(wentry) if getattr(leaf, "ndim", 0) else P()
+
+    def wtree(tree):
+        return jax.tree.map(wspec, tree)
+
+    def rep(tree):
+        return jax.tree.map(lambda _: P(), tree)
+
+    outer = rep if exact_average else wtree
+    return SlowMoState(
+        params=wtree(state.params),
+        inner=InnerOptState(
+            h=wtree(state.inner.h), v=wtree(state.inner.v), count=P()
+        ),
+        gossip=GossipState(
+            w=wspec(state.gossip.w),
+            stale=wtree(state.gossip.stale),
+            stale_w=wspec(state.gossip.stale_w),
+        ),
+        outer_params=outer(state.outer_params),
+        slow_u=outer(state.slow_u),
+        step=P(),
+        outer_step=P(),
+    )
+
+
+def spmd_batch_specs(layout: WorkerLayout, batches: PyTree) -> PyTree:
+    """Batch leaves are (tau, W, ...): shard W over the worker mesh axes."""
+    wentry = _wax_entry(layout)[0]
+    return jax.tree.map(lambda _: P(None, wentry), batches)
+
+
 def batch_shardings(layout: WorkerLayout, batch_shapes: PyTree) -> PyTree:
     """Training batches: leaves (tau, W, B, ...)."""
     mesh = layout.mesh

@@ -1,0 +1,141 @@
+"""Mesh-lowered SlowMo execution: the round under ``jax.experimental.shard_map``.
+
+This is the path that turns the array-axis *simulation* of m workers into a
+distributable SPMD program.  ``make_spmd_slowmo_round`` takes the same
+``SlowMoConfig`` + ``loss_fn`` as ``slowmo.make_slowmo_round`` plus a
+``WorkerLayout`` (``repro.launch.mesh``), and runs the identical round body
+inside ``shard_map`` with the worker axis sharded over the layout's worker
+mesh axes:
+
+* the exact average (Algorithm 1 line 6) executes as ``jax.lax.pmean`` and
+  lowers to an ``all-reduce`` over the worker axes;
+* SGP/OSGP/D-PSGD gossip rolls execute as ``jax.lax.ppermute`` and lower to
+  ``collective-permute``s;
+* each device holds only its local shard of the per-worker state (the
+  leading worker axis of every leaf shrinks to ``W / num_worker_devices``,
+  i.e. 1 in the one-worker-per-device layouts).
+
+The GLOBAL state layout is identical to the array-axis path — ``init_slowmo``
+states, checkpoints and metrics are interchangeable between backends; only
+the execution differs.  Equivalence is pinned by ``tests/test_spmd.py``.
+
+Host-CPU recipe (no accelerator needed): set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in the environment
+BEFORE the first jax import, build a worker mesh with
+``launch.mesh.make_spmd_layout(8)``, and the lowered HLO contains real
+``all-reduce`` / ``collective-permute`` ops (checked via
+``distributed.hlo_analysis``).
+
+Current scope: the worker axes carry the whole mesh — model-parallel axes
+under shard_map (``auto`` axes) are a ROADMAP follow-on, so the layout's
+model axes must have size 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import comm, slowmo
+from ..core.slowmo import SlowMoConfig
+from ..launch.mesh import WorkerLayout
+from . import sharding
+
+PyTree = Any
+
+
+def _validate(cfg: SlowMoConfig, layout: WorkerLayout) -> int:
+    if not layout.worker_axes:
+        raise ValueError("spmd path needs a layout with worker mesh axes")
+    for a in layout.model_axes:
+        if a in layout.mesh.axis_names and layout.mesh.shape[a] != 1:
+            raise ValueError(
+                "spmd path does not yet compose with model parallelism: "
+                f"model axis {a!r} has size {layout.mesh.shape[a]}"
+            )
+    n_dev = int(np.prod([layout.mesh.shape[a] for a in layout.worker_axes]))
+    if cfg.num_workers % n_dev:
+        raise ValueError(
+            f"num_workers={cfg.num_workers} must be divisible by the "
+            f"{n_dev} devices of worker axes {layout.worker_axes}"
+        )
+    needs_permute = cfg.gossip_config.kind != "none"
+    if needs_permute and cfg.num_workers != n_dev:
+        raise ValueError(
+            "gossip bases need one worker per device on the mesh path "
+            f"(num_workers={cfg.num_workers}, worker devices={n_dev})"
+        )
+    return n_dev
+
+
+def mesh_backend(cfg: SlowMoConfig, layout: WorkerLayout) -> comm.MeshBackend:
+    n_dev = _validate(cfg, layout)
+    return comm.MeshBackend(layout.worker_axes, cfg.num_workers, n_dev)
+
+
+def build_spmd_round(
+    cfg: SlowMoConfig,
+    loss_fn: Callable[[PyTree, PyTree], Any],
+    layout: WorkerLayout,
+    state: PyTree,
+    batches: PyTree,
+):
+    """Explicit builder: returns the jitted shard-mapped round function.
+
+    ``state`` / ``batches`` supply the pytree structure for the Partition-
+    Specs (concrete arrays or ``jax.eval_shape`` structs both work); use the
+    returned function's ``.lower(state, batches, lr)`` for HLO inspection.
+    """
+    backend = mesh_backend(cfg, layout)
+    body = slowmo.make_slowmo_round(cfg, loss_fn, backend)
+    state_specs = sharding.spmd_state_specs(
+        layout, state, exact_average=cfg.exact_average
+    )
+    batch_specs = sharding.spmd_batch_specs(layout, batches)
+    metric_specs = {"loss": P()}
+    if cfg.track_drift:
+        metric_specs["drift"] = P()
+    mapped = shard_map(
+        body,
+        mesh=layout.mesh,
+        in_specs=(state_specs, batch_specs, P()),
+        out_specs=(state_specs, metric_specs),
+        check_rep=False,
+    )
+    return jax.jit(mapped)
+
+
+def make_spmd_slowmo_round(
+    cfg: SlowMoConfig,
+    loss_fn: Callable[[PyTree, PyTree], Any],
+    layout: WorkerLayout,
+):
+    """Drop-in replacement for ``jax.jit(slowmo.make_slowmo_round(...))``.
+
+    The shard_map wrapping needs the state/batch pytree structure, which is
+    only known at call time — the first call (per structure) builds and
+    caches the jitted mapped function.
+    """
+    _validate(cfg, layout)
+    cache: dict = {}
+
+    def round_fn(state, batches, lr):
+        key = (jax.tree.structure(state), jax.tree.structure(batches))
+        if key not in cache:
+            cache[key] = build_spmd_round(cfg, loss_fn, layout, state, batches)
+        return cache[key](state, batches, lr)
+
+    round_fn.build = lambda state, batches: build_spmd_round(
+        cfg, loss_fn, layout, state, batches
+    )
+    return round_fn
+
+
+def state_shardings(cfg: SlowMoConfig, layout: WorkerLayout, state: PyTree) -> PyTree:
+    """NamedSharding tree to ``jax.device_put`` a global SlowMoState onto the
+    worker mesh (optional — jit would move it on first call anyway)."""
+    specs = sharding.spmd_state_specs(layout, state, exact_average=cfg.exact_average)
+    return jax.tree.map(lambda s: NamedSharding(layout.mesh, s), specs)

@@ -35,6 +35,28 @@ def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")) -> Mesh:
     return Mesh(devices, axes)
 
 
+def make_worker_mesh(num_workers: int, axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``num_workers`` devices: one worker per device.
+
+    This is the entry mesh for the shard_map execution path
+    (``repro.distributed.spmd``); on a CPU-only host set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<num_workers>``
+    before the first jax import.
+    """
+    devs = jax.devices()
+    if len(devs) < num_workers:
+        raise ValueError(
+            f"need {num_workers} devices for a worker mesh, have {len(devs)}"
+        )
+    return Mesh(np.asarray(devs[:num_workers]), (axis,))
+
+
+def make_spmd_layout(num_workers: int) -> WorkerLayout:
+    """WorkerLayout for the shard_map path: all mesh axes are worker axes."""
+    mesh = make_worker_mesh(num_workers)
+    return WorkerLayout(mesh, worker_axes=("data",), batch_axes=(), model_axes=())
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkerLayout:
     """How SlowMo workers map onto mesh axes."""

@@ -19,6 +19,7 @@ from ..core import slowmo
 from ..data import MarkovLMConfig, make_audio_sampler, make_markov_sampler
 from ..models import build_model, param_count
 from ..train import TrainConfig, Trainer
+from ..train import checkpoint as ckpt_lib
 
 
 def main():
@@ -35,6 +36,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--full", action="store_true", help="full-size config (TPU)")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument(
+        "--mesh",
+        default="none",
+        choices=("none", "host"),
+        help="'host': lower rounds with shard_map over a 1-D device mesh, one "
+        "worker per device (CPU: export XLA_FLAGS=--xla_force_host_platform_"
+        "device_count=<workers> first); 'none': array-axis oracle",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
@@ -60,7 +69,25 @@ def main():
         lr=args.lr, log_every=max(args.rounds // 10, 1),
         ckpt_every=10 if args.ckpt else 0, ckpt_path=args.ckpt,
     )
-    Trainer(model, smcfg, tc, sampler).run()
+    layout = None
+    if args.mesh == "host":
+        from .mesh import make_spmd_layout
+
+        layout = make_spmd_layout(args.workers)
+        print(f"mesh path: {args.workers} workers over {layout.mesh}")
+    trainer = Trainer(model, smcfg, tc, sampler, layout=layout)
+
+    state = None
+    if args.ckpt and ckpt_lib.exists(args.ckpt):
+        state, meta = ckpt_lib.restore(args.ckpt, like=trainer.init_state())
+        done = int(meta.get("step") or 0)
+        print(f"resuming from {args.ckpt} at round {done}")
+        if done >= args.rounds:
+            print("checkpoint already past --rounds; nothing to do")
+            return
+        state = jax.tree.map(jnp.asarray, state)
+    rounds = args.rounds if state is None else args.rounds - int(state.outer_step)
+    trainer.run(state=state, rounds=rounds)
 
 
 if __name__ == "__main__":

@@ -26,14 +26,33 @@ def save(path: str, tree: PyTree, step: int | None = None) -> None:
         json.dump(meta, f)
 
 
-def restore(path: str) -> tuple[PyTree, dict]:
+def restore(path: str, like: PyTree | None = None) -> tuple[PyTree, dict]:
+    """Load a snapshot; leaves come back as numpy arrays.
+
+    ``like`` (a template pytree or ``jax.eval_shape`` structs, e.g. the
+    freshly-initialized state) enables shape/dtype validation — a mismatch
+    (changed config, truncated file) raises instead of poisoning training.
+    """
     with open(path + ".treedef", "rb") as f:
         treedef = pickle.load(f)
     data = np.load(path + ".npz")
     leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
     with open(path + ".meta.json") as f:
         meta = json.load(f)
-    return jax.tree.unflatten(treedef, leaves), meta
+    tree = jax.tree.unflatten(treedef, leaves)
+    if like is not None:
+        ref_leaves, ref_def = jax.tree.flatten(like)
+        if ref_def != treedef:
+            raise ValueError(
+                f"checkpoint tree structure mismatch:\n got {treedef}\n want {ref_def}"
+            )
+        for i, (got, want) in enumerate(zip(leaves, ref_leaves)):
+            if tuple(got.shape) != tuple(want.shape) or got.dtype != want.dtype:
+                raise ValueError(
+                    f"checkpoint leaf {i}: got {got.dtype}{tuple(got.shape)}, "
+                    f"want {want.dtype}{tuple(want.shape)}"
+                )
+    return tree, meta
 
 
 def exists(path: str) -> bool:

@@ -31,17 +31,25 @@ class TrainConfig:
     seq_len: int = 128
     lr: float = 0.1
     schedule: str = "constant"  # 'constant' | 'warmup_step' | 'inv_sqrt'
-    warmup_steps: int = 5
-    decay_rounds: tuple[int, ...] = ()
+    warmup_steps: int = 5  # schedule warmup, in INNER steps
+    decay_rounds: tuple[int, ...] = ()  # step-decay milestones, in outer ROUNDS
     log_every: int = 10
     ckpt_every: int = 0
     ckpt_path: str = ""
-    grad_clip: float = 0.0  # (applied inside loss via value clipping if set)
+    grad_clip: float = 0.0  # global-norm clip, wired to InnerOptConfig.clip_norm
 
 
-def make_lr_fn(tc: TrainConfig):
+def make_lr_fn(tc: TrainConfig, tau: int = 1):
+    """LR schedule as a function of the INNER-step index.
+
+    The paper's schedules (Goyal warmup+step-decay, inverse-sqrt) are defined
+    in inner steps, so ``warmup_steps`` counts inner steps; the trainer calls
+    the schedule with ``round * tau``.  ``decay_rounds`` keeps its outer-round
+    semantics and is converted to step milestones here.
+    """
     if tc.schedule == "warmup_step":
-        return schedules.warmup_step_decay(tc.lr, tc.warmup_steps, tc.decay_rounds)
+        decay_steps = tuple(r * tau for r in tc.decay_rounds)
+        return schedules.warmup_step_decay(tc.lr, tc.warmup_steps, decay_steps)
     if tc.schedule == "inv_sqrt":
         return schedules.inverse_sqrt(tc.lr, tc.warmup_steps)
     return schedules.constant(tc.lr)
@@ -56,14 +64,30 @@ class Trainer:
         sampler: Callable[[int, int, int, int], PyTree],
         *,
         eval_fn: Optional[Callable[[PyTree], float]] = None,
+        layout=None,
     ):
+        if tc.grad_clip and not smcfg.inner.clip_norm:
+            smcfg = dataclasses.replace(
+                smcfg,
+                inner=dataclasses.replace(smcfg.inner, clip_norm=tc.grad_clip),
+            )
         self.model = model
         self.smcfg = smcfg
         self.tc = tc
         self.sampler = sampler
         self.eval_fn = eval_fn
-        self.lr_fn = make_lr_fn(tc)
-        self.round_fn = jax.jit(slowmo.make_slowmo_round(smcfg, model.loss_fn))
+        self.layout = layout
+        self.lr_fn = make_lr_fn(tc, smcfg.tau)
+        if layout is not None:
+            # mesh-lowered path: worker axis sharded over the layout's mesh,
+            # collectives lower to all-reduce / collective-permute.
+            from ..distributed import spmd
+
+            self.round_fn = spmd.make_spmd_slowmo_round(
+                smcfg, model.loss_fn, layout
+            )
+        else:
+            self.round_fn = jax.jit(slowmo.make_slowmo_round(smcfg, model.loss_fn))
         self.history: list[dict] = []
 
     def init_state(self, key=None) -> SlowMoState:
@@ -79,11 +103,19 @@ class Trainer:
         return {"tokens": raw}
 
     def run(self, state: Optional[SlowMoState] = None, rounds: Optional[int] = None):
-        state = state or self.init_state()
-        rounds = rounds or self.tc.total_rounds
+        """Run ``rounds`` SlowMo rounds (default: tc.total_rounds).
+
+        Passing a restored ``state`` (e.g. from ``checkpoint.restore``)
+        resumes at the round recorded in ``state.outer_step`` — the LR
+        schedule and sampler continue from the absolute round index, so a
+        resumed run reproduces an uninterrupted one.
+        """
+        state = state if state is not None else self.init_state()
+        rounds = rounds if rounds is not None else self.tc.total_rounds
+        start = int(jax.device_get(state.outer_step))
         t0 = time.perf_counter()
-        for r in range(rounds):
-            lr = self.lr_fn(r)
+        for r in range(start, start + rounds):
+            lr = self.lr_fn(r * self.smcfg.tau)
             batches = self._batches(r)
             state, metrics = self.round_fn(state, batches, lr)
             rec = {
@@ -95,7 +127,7 @@ class Trainer:
             }
             if "drift" in metrics:
                 rec["drift"] = float(metrics["drift"])
-            if self.eval_fn and (r % max(self.tc.log_every, 1) == 0 or r == rounds - 1):
+            if self.eval_fn and (r % max(self.tc.log_every, 1) == 0 or r == start + rounds - 1):
                 rec["eval"] = float(self.eval_fn(_eval_params(self.smcfg, state)))
             self.history.append(rec)
             if self.tc.log_every and r % self.tc.log_every == 0:

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+``from _hyp import given, settings, st`` behaves exactly like the real
+hypothesis imports when the package is installed.  When it is NOT installed
+(the repo declares it only as a test extra — see pyproject.toml), the shim
+supplies stand-ins under which every ``@given``-decorated test collects and
+SKIPS cleanly instead of killing collection of the whole module, so the
+plain example-based tests in the same files still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... — accepted and discarded."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed")
+
+            # keep the collected name; the (*a, **k) signature hides the
+            # strategy parameters from pytest's fixture resolution
+            skipper.__name__ = f.__name__
+            skipper.__doc__ = f.__doc__
+            return skipper
+
+        return deco

@@ -2,10 +2,13 @@
 (conftest must not pollute the main process's device count) and verifies that
 lower+compile works end-to-end on a miniature (2,2,2) pod/data/model mesh for
 a reduced config of each family, both train and decode entry points."""
+import os
 import subprocess
 import sys
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r"""
 import os
@@ -80,8 +83,8 @@ def test_dryrun_small_mesh_all_families():
         capture_output=True,
         text=True,
         timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"), "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ALL-OK" in proc.stdout

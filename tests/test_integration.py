@@ -93,6 +93,7 @@ class TestVariantEquivalences:
                 np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2
             )
 
+    @pytest.mark.slow
     def test_moe_dispatch_variants_identical_loss_and_grads(self):
         cfg = get_config("deepseek-moe-16b", reduced=True)
         batch = make_batch(cfg, jax.random.PRNGKey(1), 2, 32)

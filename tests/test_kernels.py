@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # skips property tests if no hypothesis
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import fused_nesterov as fn
