@@ -1,16 +1,38 @@
-"""Round-latency benchmark: shard_map mesh path vs the array-axis oracle.
+"""Round-latency + boundary-traffic benchmark: packed flat-buffer state vs
+the per-leaf tree layout, on both execution backends.
 
-Measures wall-clock per SlowMo round for both execution backends on the same
-host, using 8 forced host-CPU devices for the mesh path (set BEFORE the jax
-import — this is the standard recipe, see repro/distributed/spmd.py).  On a
-single CPU the mesh path mostly pays shard_map orchestration overhead; the
-point of the benchmark is (a) a regression gate for that overhead and (b) the
-harness that, on a real multi-chip slice, measures the actual collective cost
-the paper's tau amortizes.
+For every (preset, packed, average_dtype) case this measures
+
+* wall-clock per SlowMo round for the array-axis oracle and the shard_map
+  mesh path (8 forced host-CPU devices — set BEFORE the jax import), and
+* the lowered per-device collective traffic of the mesh round (parsed from
+  the compiled HLO): all-reduce / collective-permute counts and bytes, plus
+  the number of LARGE all-reduces (> 1 KiB, i.e. the parameter boundary as
+  opposed to scalar loss reductions).
+
+The packed path must show exactly ONE large all-reduce per exact-average
+round; sweeping ``average_dtype`` over {f32, bf16} quantifies the
+boundary-traffic halving of bf16 collectives (ROADMAP item) — on the packed
+path that is one bf16 buffer instead of N bf16 casts.  Per-round times are
+MEDIANS — the 8 forced devices oversubscribe the 2-core container and
+contention spikes swing means ~2x.  Measured on an idle box (defaults, see
+BENCH_packed_round.json): packed mesh rounds run ~1.8x (sgp, permutes
+collapsed ~150 -> 6) and ~4x (ar, per-step gradient all-reduces 48 -> 2)
+faster than per-leaf, and 1.0-1.7x across runs for local (whose inner loop
+is communication-free, so only the boundary changes); the axis-oracle
+backend, which has no per-leaf collective dispatch to save, stays within
+~25% either way.  The
+collective counts/bytes in the JSON are deterministic; real-hardware ICI
+latency is the ROADMAP follow-on.
+
+Results go to BENCH_packed_round.json (``--out``).  ``--smoke`` runs one
+tiny round per backend/layout so CI can keep this harness from rotting.
 
     PYTHONPATH=src python benchmarks/bench_spmd_round.py [--workers 8] [--tau 12]
 """
 import argparse
+import dataclasses
+import json
 import os
 import time
 
@@ -20,19 +42,32 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import slowmo  # noqa: E402
-from repro.distributed import spmd  # noqa: E402
+from repro.distributed import hlo_analysis, spmd  # noqa: E402
 from repro.launch.mesh import make_spmd_layout  # noqa: E402
 
+BIG = 1024  # bytes; collectives above this are parameter traffic, not scalars
 
-def make_problem(W: int, tau: int, d: int = 256, B: int = 8):
+
+def make_problem(W: int, tau: int, d: int = 256, B: int = 8, layers: int = 8):
+    """Deep-ish MLP: 2*layers+1 parameter leaves, so the per-leaf boundary
+    overhead (one collective + one launch per leaf) is actually visible."""
+
     def loss_fn(params, batch):
-        h = jnp.tanh(batch["x"] @ params["w1"])
-        return jnp.mean((h @ params["w2"] - batch["y"]) ** 2)
+        h = batch["x"]
+        for lyr in params["layers"]:
+            h = jnp.tanh(h @ lyr["w"] + lyr["b"])
+        return jnp.mean((h @ params["head"] - batch["y"]) ** 2)
 
     k = jax.random.PRNGKey(0)
     params0 = {
-        "w1": 0.1 * jax.random.normal(k, (d, d)),
-        "w2": 0.1 * jax.random.normal(jax.random.fold_in(k, 1), (d, 1)),
+        "layers": [
+            {
+                "w": (0.3 / d**0.5) * jax.random.normal(jax.random.fold_in(k, 2 * i), (d, d)),
+                "b": jnp.zeros((d,)),
+            }
+            for i in range(layers)
+        ],
+        "head": 0.1 * jax.random.normal(jax.random.fold_in(k, 999), (d, 1)),
     }
     kb = jax.random.PRNGKey(1)
     batches = {
@@ -43,45 +78,158 @@ def make_problem(W: int, tau: int, d: int = 256, B: int = 8):
 
 
 def time_fn(fn, state, batches, iters=20, warmup=3):
+    """Median per-round wall-clock: robust to the contention spikes of the
+    oversubscribed host-CPU device farm (mean was swung ~2x by them)."""
     for _ in range(warmup):
         state, m = fn(state, batches, 0.05)
     jax.block_until_ready(m["loss"])
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         state, m = fn(state, batches, 0.05)
-    jax.block_until_ready(m["loss"])
-    return (time.perf_counter() - t0) / iters
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters):
+    """One (preset, packed, average_dtype) sweep point; returns a record."""
+    cfg = dataclasses.replace(
+        slowmo.preset(preset, num_workers=layout.num_workers, tau=batches["x"].shape[0]),
+        packed=packed,
+        average_dtype=jnp.bfloat16 if avg_dtype == "bf16" else None,
+    )
+    pack = slowmo.make_state_pack_spec(cfg, params0) if packed else None
+    # the mesh round DONATES its state, whose leaves may alias params0's
+    # buffers (broadcast/astype views) — give every case its own copy.
+    params0 = jax.tree.map(jnp.array, params0)
+
+    t_axis = time_fn(
+        jax.jit(slowmo.make_slowmo_round(cfg, loss_fn, pack=pack)),
+        slowmo.init_slowmo(cfg, params0, pack=pack),
+        batches,
+        iters,
+        warmup=min(3, iters),
+    )
+    # build the shard-mapped round ONCE: lower it for traffic first (the
+    # round donates its state, so inspect before executing), then time the
+    # same jitted fn.  Traffic is parsed from the PRE-optimization HLO: that
+    # is the issued collective set with issued dtypes (XLA:CPU's float
+    # normalization would otherwise rewrite bf16 all-reduces to f32 in the
+    # optimized module and hide the halving).
+    state = slowmo.init_slowmo(cfg, params0, pack=pack)
+    mesh_fn = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack).build(
+        state, batches
+    )
+    lowered = mesh_fn.lower(state, batches, jnp.float32(0.05))
+    txt = hlo_analysis.lowered_hlo_text(lowered)
+    t_mesh = time_fn(mesh_fn, state, batches, iters, warmup=min(3, iters))
+
+    cb = hlo_analysis.collective_bytes(txt)
+    counts, sizes = cb["_counts"], cb["_sizes"]
+    return {
+        "preset": preset,
+        "packed": packed,
+        "average_dtype": avg_dtype,
+        "axis_ms": t_axis * 1e3,
+        "mesh_ms": t_mesh * 1e3,
+        "all_reduce_count": counts["all-reduce"],
+        "all_reduce_bytes": cb["all-reduce"],
+        "big_all_reduce_count": sum(1 for s in sizes["all-reduce"] if s > BIG),
+        "big_all_reduce_bytes": sum(s for s in sizes["all-reduce"] if s > BIG),
+        "collective_permute_count": counts["collective-permute"],
+        "collective_permute_bytes": cb["collective-permute"],
+    }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--tau", type=int, default=12)
-    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--dim", type=int, default=96)
+    ap.add_argument("--layers", type=int, default=24)
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--out", default="BENCH_packed_round.json")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI guard: one tiny round, both backends, packed + per-leaf",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        args.tau, args.dim, args.layers, args.iters = 2, 64, 2, 1
+        if args.out == "BENCH_packed_round.json":
+            # don't clobber the real sweep's artifact from the CI guard
+            args.out = "BENCH_packed_round_smoke.json"
 
     W = args.workers
-    loss_fn, params0, batches = make_problem(W, args.tau, args.dim)
+    loss_fn, params0, batches = make_problem(W, args.tau, args.dim, layers=args.layers)
     layout = make_spmd_layout(W)
-    print(f"workers={W} tau={args.tau} d={args.dim} devices={len(jax.devices())}")
+    print(
+        f"workers={W} tau={args.tau} d={args.dim} iters={args.iters} "
+        f"devices={len(jax.devices())}"
+    )
 
-    for preset in ("local_sgd+slowmo", "sgp+slowmo", "ar_sgd"):
-        cfg = slowmo.preset(preset, num_workers=W, tau=args.tau)
-        b = batches if cfg.tau == args.tau else jax.tree.map(
-            lambda x: x[: cfg.tau], batches
-        )
-        state = slowmo.init_slowmo(cfg, params0)
-        t_axis = time_fn(
-            jax.jit(slowmo.make_slowmo_round(cfg, loss_fn)), state, b, args.iters
-        )
-        t_mesh = time_fn(
-            spmd.make_spmd_slowmo_round(cfg, loss_fn, layout), state, b, args.iters
-        )
-        print(
-            f"{preset:20s} axis {t_axis * 1e3:8.2f} ms/round   "
-            f"mesh {t_mesh * 1e3:8.2f} ms/round   mesh/axis {t_mesh / t_axis:5.2f}x"
-        )
+    presets = ("local_sgd+slowmo",) if args.smoke else (
+        "local_sgd+slowmo", "sgp+slowmo", "ar_sgd",
+    )
+    dtypes = ("f32",) if args.smoke else ("f32", "bf16")
+    records = []
+    for preset in presets:
+        b = batches
+        cfg0 = slowmo.preset(preset, num_workers=W, tau=args.tau)
+        if cfg0.tau != args.tau:
+            b = jax.tree.map(lambda x: x[: cfg0.tau], batches)
+        for packed in (False, True):
+            for avg in dtypes:
+                rec = run_case(
+                    preset, packed, avg, layout, loss_fn, params0, b, args.iters
+                )
+                records.append(rec)
+                print(
+                    f"{preset:18s} packed={int(packed)} avg={avg:4s} "
+                    f"axis {rec['axis_ms']:8.2f} ms  mesh {rec['mesh_ms']:8.2f} ms  "
+                    f"ar n={rec['all_reduce_count']} big={rec['big_all_reduce_count']} "
+                    f"({rec['big_all_reduce_bytes']} B)  "
+                    f"cp n={rec['collective_permute_count']}"
+                )
+
+    # headline comparisons: packed vs per-leaf latency, bf16 traffic halving
+    def find(preset, packed, avg):
+        for r in records:
+            if (r["preset"], r["packed"], r["average_dtype"]) == (preset, packed, avg):
+                return r
+        return None
+
+    summary = {}
+    for preset in presets:
+        t, p = find(preset, False, "f32"), find(preset, True, "f32")
+        if t and p:
+            summary[preset] = {
+                "mesh_speedup_packed": t["mesh_ms"] / p["mesh_ms"],
+                "axis_speedup_packed": t["axis_ms"] / p["axis_ms"],
+                "big_all_reduce_count_tree": t["big_all_reduce_count"],
+                "big_all_reduce_count_packed": p["big_all_reduce_count"],
+            }
+            pb = find(preset, True, "bf16")
+            if pb and p["big_all_reduce_bytes"]:
+                summary[preset]["bf16_traffic_ratio"] = (
+                    pb["big_all_reduce_bytes"] / p["big_all_reduce_bytes"]
+                )
+            print(
+                f"{preset}: packed mesh speedup "
+                f"{summary[preset]['mesh_speedup_packed']:.2f}x, big all-reduces "
+                f"{t['big_all_reduce_count']} -> {p['big_all_reduce_count']}"
+                + (
+                    f", bf16 traffic x{summary[preset]['bf16_traffic_ratio']:.2f}"
+                    if "bf16_traffic_ratio" in summary[preset]
+                    else ""
+                )
+            )
+
+    with open(args.out, "w") as f:
+        json.dump({"records": records, "summary": summary}, f, indent=2)
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

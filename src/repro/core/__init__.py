@@ -1,13 +1,21 @@
 """SlowMo core: the paper's contribution as a composable JAX module."""
-from .base_opt import InnerOptConfig, InnerOptState, init_inner_state, update_direction
+from .base_opt import (
+    InnerOptConfig,
+    InnerOptState,
+    apply_step,
+    init_inner_state,
+    update_direction,
+)
 from .comm import AxisBackend, CommBackend, MeshBackend
 from .gossip import GossipConfig, GossipState
+from .packing import Packed, PackSpec, make_pack_spec, pack_state, unpack_state
 from .slowmo import (
     SlowMoConfig,
     SlowMoState,
     init_slowmo,
     make_inner_step,
     make_slowmo_round,
+    make_state_pack_spec,
     outer_update,
     preset,
 )

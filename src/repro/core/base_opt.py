@@ -70,6 +70,22 @@ def init_inner_state(cfg: InnerOptConfig, params: PyTree) -> InnerOptState:
     return InnerOptState(h=h, v=v, count=jnp.zeros((), jnp.int32))
 
 
+def _clip(cfg: InnerOptConfig, grads: PyTree) -> PyTree:
+    """Per-worker global-norm clip: norms computed over the non-worker dims
+    of every leaf jointly (axis 0 is the worker axis).  On packed state the
+    pad regions are zero, so they do not perturb the norm."""
+    if not cfg.clip_norm:
+        return grads
+    sq = sum(
+        jnp.sum(jnp.square(g), axis=tuple(range(1, g.ndim)))
+        for g in jax.tree.leaves(grads)
+    )  # (W,)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(jnp.sqrt(sq), 1e-9))
+    return jax.tree.map(
+        lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), grads
+    )
+
+
 def update_direction(
     cfg: InnerOptConfig,
     state: InnerOptState,
@@ -81,18 +97,7 @@ def update_direction(
     The caller applies ``x <- x - lr * d``.  Gradients and buffers are
     accumulated in fp32 regardless of the parameter dtype.
     """
-    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-    if cfg.clip_norm:
-        # per-worker global-norm clip: norms computed over the non-worker dims
-        # of every leaf jointly (axis 0 is the worker axis)
-        sq = sum(
-            jnp.sum(jnp.square(g), axis=tuple(range(1, g.ndim)))
-            for g in jax.tree.leaves(grads)
-        )  # (W,)
-        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(jnp.sqrt(sq), 1e-9))
-        grads = jax.tree.map(
-            lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), grads
-        )
+    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
     if cfg.weight_decay:
         grads = jax.tree.map(
             lambda g, p: g + cfg.weight_decay * p.astype(jnp.float32),
@@ -120,6 +125,51 @@ def update_direction(
         lambda h, v: (h / c1) / (jnp.sqrt(v / c2) + cfg.eps), h_new, v_new
     )
     return d, InnerOptState(h=h_new, v=v_new, count=count)
+
+
+def apply_step(
+    cfg: InnerOptConfig,
+    state: InnerOptState,
+    params: PyTree,
+    grads: PyTree,
+    lr,
+    *,
+    z: PyTree | None = None,
+    use_pallas: bool = False,
+) -> tuple[PyTree, InnerOptState]:
+    """One full base-optimizer step: ``params' = params - lr * d``.
+
+    ``z`` (when given) is the de-biased iterate the direction is evaluated at
+    (SGP/OSGP push-sum); the step is still applied to ``params``.  For plain
+    Nesterov SGD evaluated at ``params`` itself, ``use_pallas`` routes the
+    momentum + look-ahead + parameter step through the fused kernel — one HBM
+    pass and (on packed state) a single launch — instead of separate
+    h-update / d / axpy passes.  Gradient clipping composes: it is applied to
+    ``grads`` before the kernel.
+    """
+    fused = use_pallas and z is None and cfg.kind == "sgd" and cfg.nesterov
+    if not fused:
+        d, state = update_direction(cfg, state, z if z is not None else params, grads)
+        new_params = jax.tree.map(
+            lambda x, dd: (x.astype(jnp.float32) - lr * dd).astype(x.dtype),
+            params,
+            d,
+        )
+        return new_params, state
+
+    from ..kernels import ops as kops  # local import: kernels are optional
+
+    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+    x_new, h_new = kops.fused_nesterov_update(
+        params,
+        state.h,
+        grads,
+        lr=lr,
+        momentum=cfg.momentum,
+        weight_decay=cfg.weight_decay,
+        use_pallas=True,
+    )
+    return x_new, InnerOptState(h=h_new, v=state.v, count=state.count + 1)
 
 
 def reset_buffers(cfg: InnerOptConfig, state: InnerOptState) -> InnerOptState:

@@ -20,6 +20,14 @@ Both backends implement the same five primitives; everything else in
 ``slowmo.py`` / ``gossip.py`` / ``base_opt.py`` is backend-agnostic.  See
 ``repro.distributed.spmd`` for the shard_map wrapper that pairs the
 ``MeshBackend`` with PartitionSpecs.
+
+The primitives are also LAYOUT-agnostic: they tree-map over whatever leaves
+the state carries.  On the per-leaf tree layout that is one collective per
+parameter leaf; on the packed flat-buffer layout (``repro.core.packing``)
+the same ``worker_mean`` call sees a single ``(W, rows, 1024)`` buffer per
+dtype group, so the exact average lowers to ONE all-reduce (and a gossip
+roll to one collective-permute) per boundary — ``average_dtype=bf16`` then
+halves the traffic of that one transfer instead of issuing N bf16 casts.
 """
 from __future__ import annotations
 

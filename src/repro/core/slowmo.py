@@ -20,8 +20,15 @@ plain array ops on the leading axis (single-device oracle), while the
 — runs the same round body inside ``shard_map`` with ``lax.pmean`` /
 ``lax.ppermute`` over real mesh axes.  To exercise the mesh path on a
 CPU-only host, set ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-BEFORE importing jax (see tests/test_spmd.py).  Recovered special cases
-(tested):
+BEFORE importing jax (see tests/test_spmd.py).
+
+Orthogonally, ``packed=True`` swaps the per-leaf state pytrees for a few
+contiguous ``(rows, 1024)`` flat buffers (``repro.core.packing``): the round
+body is identical (everything here tree-maps), but the boundary then costs
+one kernel launch and ONE collective instead of one per parameter leaf, and
+the tree layout is materialized only at the ``loss_fn`` boundary.
+Equivalence with the tree layout is pinned by ``tests/test_packed.py``.
+Recovered special cases (tested):
 
 * base='local', tau=1, alpha=1, beta>0 ........ large-batch SGD + momentum
 * base='local', tau>1, alpha=1, beta=0 ........ Local SGD
@@ -38,9 +45,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import base_opt, comm, gossip
+from . import base_opt, comm, gossip, packing
 from .base_opt import InnerOptConfig, InnerOptState
 from .gossip import GossipConfig, GossipState
+from .packing import PackSpec
 
 PyTree = Any
 
@@ -62,9 +70,14 @@ class SlowMoConfig:
     exact_average: bool = True  # False => SlowMo-noaverage (§6)
     param_dtype: Any = jnp.float32
     track_drift: bool = False
-    use_pallas: bool = False  # fused Pallas outer update (interpret on CPU)
+    use_pallas: bool = False  # fused Pallas kernels (interpret on CPU): the
+    # lines-7-8 outer update, AND the inner Nesterov step whenever the base
+    # evaluates gradients at the params themselves (sgd+nesterov, non-gossip)
     average_dtype: Any = None  # dtype of the exact-average all-reduce (None=f32)
     unroll_inner: bool = False  # unroll the tau inner steps (dry-run cost analysis)
+    packed: bool = False  # flat-buffer state: one kernel launch / collective
+    # per boundary instead of one per leaf (see core/packing.py); requires a
+    # PackSpec threaded through init_slowmo / make_slowmo_round.
 
     def __post_init__(self):
         if self.base not in BASES:
@@ -100,17 +113,59 @@ def _bcast_workers(tree: PyTree, W: int, dtype) -> PyTree:
     )
 
 
-def init_slowmo(cfg: SlowMoConfig, params0: PyTree) -> SlowMoState:
-    """Initialize from a single (worker-axis-free) parameter pytree."""
+def make_state_pack_spec(cfg: SlowMoConfig, params0: PyTree) -> PackSpec:
+    """The static packing index for ``cfg.packed`` state: built from the
+    parameter tree AFTER the ``param_dtype`` cast, so every trainer / test /
+    checkpoint that derives it from the same model agrees on the layout.
+    ``params0`` may be concrete arrays or ``jax.eval_shape`` structs."""
+    return packing.make_pack_spec(
+        jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, cfg.param_dtype), params0
+        )
+    )
+
+
+def init_slowmo(
+    cfg: SlowMoConfig, params0: PyTree, pack: PackSpec | None = None
+) -> SlowMoState:
+    """Initialize from a single (worker-axis-free) parameter pytree.
+
+    With ``cfg.packed`` every state component is a ``packing.Packed`` flat
+    buffer — ``(W, rows, 1024)`` for per-worker leaves, ``(rows, 1024)`` for
+    the replicated outer iterate — instead of a parameter-shaped pytree.
+    """
     W = cfg.num_workers
-    params = _bcast_workers(params0, W, cfg.param_dtype)
-    outer = jax.tree.map(lambda x: x.astype(jnp.float32), params0)
-    if not cfg.exact_average:
-        outer = _bcast_workers(params0, W, jnp.float32)
+    if cfg.packed:
+        pack = pack or make_state_pack_spec(cfg, params0)
+
+        def bcast(b):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (W,) + x.shape), b
+            )
+
+        params = bcast(
+            pack.pack(jax.tree.map(lambda x: x.astype(cfg.param_dtype), params0))
+        )
+        outer = pack.pack(params0, dtype=jnp.float32)
+        if not cfg.exact_average:
+            outer = bcast(outer)
+        inner = InnerOptState(
+            h=pack.zeros(lead=(W,), dtype=jnp.float32),
+            v=pack.zeros(lead=(W,), dtype=jnp.float32)
+            if cfg.inner.kind == "adam"
+            else pack.scalars(),
+            count=jnp.zeros((), jnp.int32),
+        )
+    else:
+        params = _bcast_workers(params0, W, cfg.param_dtype)
+        outer = jax.tree.map(lambda x: x.astype(jnp.float32), params0)
+        if not cfg.exact_average:
+            outer = _bcast_workers(params0, W, jnp.float32)
+        inner = base_opt.init_inner_state(cfg.inner, params)
     u = jax.tree.map(jnp.zeros_like, outer)
     return SlowMoState(
         params=params,
-        inner=base_opt.init_inner_state(cfg.inner, params),
+        inner=inner,
         gossip=gossip.init_gossip_state(cfg.gossip_config, params),
         outer_params=outer,
         slow_u=u,
@@ -123,6 +178,7 @@ def make_inner_step(
     cfg: SlowMoConfig,
     loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     backend: comm.CommBackend | None = None,
+    pack: PackSpec | None = None,
 ):
     """Build one base-optimizer step over all W workers.
 
@@ -130,6 +186,12 @@ def make_inner_step(
     Returns ``step_fn((params, inner, gossip_state, step), batch) ->
     (carry, mean_loss)`` where batch leaves have leading worker axis W
     (its local shard on the mesh backend).
+
+    With ``pack`` (packed mode) the carry holds flat buffers; the parameter
+    tree is materialized ONLY at the ``loss_fn`` boundary (slice + reshape),
+    gradients are packed straight back, and everything downstream — AR
+    gradient averaging, momentum, gossip mixing — runs on whole buffers, so
+    per-step collectives are one per buffer instead of one per leaf.
     """
     backend = backend or comm.AxisBackend(cfg.num_workers)
     vgrad = jax.vmap(jax.value_and_grad(loss_fn))
@@ -142,15 +204,21 @@ def make_inner_step(
             z = gossip.debias(params, gstate.w)
         else:
             z = params
-        losses, grads = vgrad(z, batch)
+        z_tree = pack.unpack(z) if pack is not None else z
+        losses, grads = vgrad(z_tree, batch)
+        if pack is not None:
+            grads = pack.pack(grads, dtype=jnp.float32)
         if cfg.base == "ar":
             # ALLREDUCE baseline: average gradients across workers every step.
             grads = jax.tree.map(backend.mean_keepdims, grads)
-        d, inner = base_opt.update_direction(cfg.inner, inner, z, grads)
-        params = jax.tree.map(
-            lambda x, dd: (x.astype(jnp.float32) - lr * dd).astype(x.dtype),
+        params, inner = base_opt.apply_step(
+            cfg.inner,
+            inner,
             params,
-            d,
+            grads,
+            lr,
+            z=z if gcfg.kind in ("sgp", "osgp") else None,
+            use_pallas=cfg.use_pallas,
         )
         params, gstate = gossip.mix(gcfg, gstate, params, step, backend)
         loss = backend.pmean_scalar(jnp.mean(losses))
@@ -165,7 +233,12 @@ def outer_update(
     lr,
     backend: comm.CommBackend | None = None,
 ) -> SlowMoState:
-    """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2)."""
+    """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2).
+
+    This code is layout-agnostic: on packed state every tree here has ~one
+    leaf per dtype group, so line 6 lowers to a single all-reduce and the
+    fused lines-7-8 kernel runs as a single ``pallas_call`` over the whole
+    buffer (the packed rows are block-aligned — no pad copies)."""
     from ..kernels import ops as kops  # local import: kernels are optional
 
     backend = backend or comm.AxisBackend(cfg.num_workers)
@@ -234,6 +307,7 @@ def make_slowmo_round(
     cfg: SlowMoConfig,
     loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     backend: comm.CommBackend | None = None,
+    pack: PackSpec | None = None,
 ):
     """Build the jittable round function.
 
@@ -245,9 +319,25 @@ def make_slowmo_round(
     ``AxisBackend`` runs them on the leading array axis; a ``MeshBackend``
     (installed by ``repro.distributed.spmd``) runs the identical body under
     shard_map with real collectives.
+
+    ``pack`` (required iff ``cfg.packed``) is the static PackSpec the state
+    was initialized with (``make_state_pack_spec``): the state then lives in
+    flat buffers and the boundary (exact average + outer update) is one
+    collective + one kernel launch.  Inside the tau-step inner loop the
+    layout is chosen per base algorithm: bases that communicate parameters
+    or gradients every step (AR, SGP/OSGP/D-PSGD) run fully packed so those
+    per-step collectives are also one-per-buffer; the communication-free
+    ``local`` base runs its inner loop on the tree layout and converts at
+    the round boundary only — a per-step unpack/pack there would cost two
+    full-state copies per step for zero collective savings.
     """
+    if cfg.packed and pack is None:
+        raise ValueError("cfg.packed requires the PackSpec the state was built with")
+    if pack is not None and not cfg.packed:
+        raise ValueError("got a PackSpec but cfg.packed is False")
     backend = backend or comm.AxisBackend(cfg.num_workers)
-    step_fn = make_inner_step(cfg, loss_fn, backend)
+    boundary_only = pack is not None and cfg.base == "local"
+    step_fn = make_inner_step(cfg, loss_fn, backend, None if boundary_only else pack)
 
     def round_fn(state: SlowMoState, batches: PyTree, lr):
         lr = jnp.asarray(lr, jnp.float32)
@@ -258,7 +348,20 @@ def make_slowmo_round(
             carry, loss = step_fn(carry, batch_k, lr)
             return carry, loss_sum + loss
 
-        carry0 = (state.params, state.inner, state.gossip, state.step)
+        inner0, params0 = state.inner, state.params
+        if boundary_only:
+            # one unpack per ROUND (amortized over tau inner steps); the
+            # SGD second-moment placeholder / none-gossip state never mix
+            # with parameter-shaped trees, so they pass through packed.
+            params0 = pack.unpack(state.params)
+            inner0 = InnerOptState(
+                h=pack.unpack(state.inner.h),
+                v=pack.unpack(state.inner.v)
+                if cfg.inner.kind == "adam"
+                else state.inner.v,
+                count=state.inner.count,
+            )
+        carry0 = (params0, inner0, state.gossip, state.step)
         acc0 = (carry0, jnp.zeros((), jnp.float32))
         if cfg.unroll_inner:
             acc = acc0
@@ -268,6 +371,15 @@ def make_slowmo_round(
         else:
             (params, inner, gstate, step), loss_sum = jax.lax.fori_loop(
                 0, cfg.tau, body, acc0
+            )
+        if boundary_only:
+            params = pack.pack(params)
+            inner = InnerOptState(
+                h=pack.pack(inner.h, dtype=jnp.float32),
+                v=pack.pack(inner.v, dtype=jnp.float32)
+                if cfg.inner.kind == "adam"
+                else inner.v,
+                count=inner.count,
             )
         state = SlowMoState(
             params=params,

@@ -48,9 +48,16 @@ def _shape_bytes(type_str: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Sum result bytes of every collective op, per op kind, from HLO text."""
+    """Sum result bytes of every collective op, per op kind, from HLO text.
+
+    Besides the per-kind byte totals, the result carries two metadata keys
+    (excluded from any ``sum`` by their ``_`` prefix): ``_counts`` — number
+    of ops per kind — and ``_sizes`` — the individual result sizes, which is
+    what lets tests pin "exactly one LARGE all-reduce per round" on the
+    packed flat-buffer path while ignoring scalar loss reductions."""
     out = {k: 0 for k in COLLECTIVE_OPS}
     counts = {k: 0 for k in COLLECTIVE_OPS}
+    sizes = {k: [] for k in COLLECTIVE_OPS}
     for line in hlo_text.splitlines():
         line = line.strip()
         if not line or "=" not in line:
@@ -60,11 +67,26 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
             # `op-start(` async forms; skip `-done` (no new traffic)
             m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
             if m:
-                out[op] += _shape_bytes(m.group(1))
+                b = _shape_bytes(m.group(1))
+                out[op] += b
                 counts[op] += 1
+                sizes[op].append(b)
                 break
     out["_counts"] = counts  # type: ignore[assignment]
+    out["_sizes"] = sizes  # type: ignore[assignment]
     return out
+
+
+def lowered_hlo_text(lowered) -> str:
+    """Pre-optimization HLO text of a ``jax`` lowered object.
+
+    Collective dtypes appear here as ISSUED by the program.  The optimized
+    (compiled) module is what actually runs, but XLA:CPU's float
+    normalization promotes bf16 all-reduces to f32 there, which would hide
+    the traffic halving of ``average_dtype=bf16`` when benchmarking on the
+    host-CPU mesh; on TPU the bf16 collective survives to the wire."""
+    ir = lowered.compiler_ir(dialect="hlo")
+    return ir.as_hlo_text() if hasattr(ir, "as_hlo_text") else str(ir)
 
 
 @dataclasses.dataclass
@@ -96,7 +118,7 @@ class Roofline:
             "hbm_bytes": self.hbm_bytes,
             "collective_bytes": self.coll_bytes,
             "collective_breakdown": {
-                k: v for k, v in self.coll_breakdown.items() if k != "_counts"
+                k: v for k, v in self.coll_breakdown.items() if not k.startswith("_")
             },
             "collective_counts": self.coll_breakdown.get("_counts", {}),
             "compute_s": self.compute_s,
@@ -115,7 +137,7 @@ def roofline_from_compiled(compiled, hlo_text: str | None = None) -> Roofline:
     hbm = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()
     coll = collective_bytes(text)
-    total_coll = float(sum(v for k, v in coll.items() if k != "_counts"))
+    total_coll = float(sum(v for k, v in coll.items() if not k.startswith("_")))
     return Roofline(
         flops=flops,
         hbm_bytes=hbm,

@@ -213,6 +213,11 @@ def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyT
     worker mesh axes; scalars and (for ``exact_average``) the replicated
     outer iterate / slow momentum get ``P()``.  ``state`` may be concrete
     arrays or ``jax.eval_shape`` structs — only structure/ndim are read.
+
+    Packed flat-buffer states (``repro.core.packing``) need no special
+    casing: a ``(W, rows, 1024)`` buffer is just one leaf whose leading axis
+    is the worker axis, and the replicated ``(rows, 1024)`` outer buffers
+    fall into the ``P()`` branch like any other worker-axis-free leaf.
     """
     from ..core.base_opt import InnerOptState
     from ..core.gossip import GossipState

@@ -1,8 +1,13 @@
 """Jit'd dispatch wrappers: Pallas kernel on TPU, pure-jnp oracle elsewhere.
 
 All entry points operate on parameter *pytrees* (the kernels themselves
-operate on padded 2D tiles); leaves are flattened, concatenated-free, padded
-to (rows, 1024) and dispatched leaf-by-leaf.
+operate on padded 2D tiles).  Two regimes:
+
+* tree layout — leaves are flattened, padded to (rows, 1024) and dispatched
+  leaf-by-leaf (one ``pallas_call`` + a pad copy per leaf);
+* packed layout (``repro.core.packing``) — leaves ARE ``(..., rows, 1024)``
+  buffers with rows a multiple of the block size, so ``_to_2d`` is a free
+  reshape and the whole state runs as a single ``pallas_call`` per buffer.
 """
 from __future__ import annotations
 
@@ -21,7 +26,12 @@ def _interpret() -> bool:
 
 
 def _to_2d(x: jax.Array, block_rows: int):
-    """Flatten + zero-pad to (rows, LANES) with rows % block_rows == 0."""
+    """Flatten + zero-pad to (rows, LANES) with rows % block_rows == 0.
+
+    Aligned inputs (packed flat buffers: trailing dim LANES and a row count
+    divisible by ``block_rows``) take the no-copy path — a pure reshape."""
+    if x.ndim >= 2 and x.shape[-1] == LANES and (x.size // LANES) % block_rows == 0:
+        return x.reshape(-1, LANES), x.size
     flat = x.reshape(-1)
     n = flat.shape[0]
     per_block = block_rows * LANES
@@ -31,13 +41,25 @@ def _to_2d(x: jax.Array, block_rows: int):
 
 
 def _from_2d(y2d: jax.Array, n: int, shape) -> jax.Array:
+    if y2d.size == n:
+        return y2d.reshape(shape)
     return y2d.reshape(-1)[:n].reshape(shape)
 
 
 def _pick_block_rows(x: jax.Array) -> int:
-    n = x.size
-    for br in (256, 64, 8, 1):
-        if n >= br * LANES:
+    """Block size chosen from the PADDED row count with bounded waste.
+
+    Prefer a block size that divides the rows exactly (packed buffers are
+    64-row aligned, so they always tile copy-free); otherwise take the
+    largest block whose round-up padding stays under max(7 rows, 12.5%) of
+    the leaf — big leaves keep big blocks (small relative pad) while
+    sub-tile leaves no longer pad to a full 256-row tile."""
+    rows = max(1, -(-x.size // LANES))
+    for br in (256, 64):
+        if rows % br == 0:
+            return br
+    for br in (256, 64, 8):
+        if -rows % br <= max(7, rows // 8):
             return br
     return 1
 
@@ -104,7 +126,9 @@ def fused_nesterov_update(x, h, g, *, lr, momentum, weight_decay=0.0, use_pallas
             br = _pick_block_rows(a)
             a2, n = _to_2d(a, br)
             b2, _ = _to_2d(b.astype(jnp.float32), br)
-            c2, _ = _to_2d(c.astype(a.dtype), br)
+            # keep gradients in fp32 (the kernel accumulates in fp32 anyway);
+            # casting them down to bf16 params would lose precision vs. ref
+            c2, _ = _to_2d(c.astype(jnp.float32), br)
             xo, ho = _fn.fused_nesterov_2d(
                 a2, b2, c2, lr, momentum=momentum, weight_decay=weight_decay,
                 block_rows=br, interpret=interpret,

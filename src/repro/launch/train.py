@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--full", action="store_true", help="full-size config (TPU)")
+    ap.add_argument(
+        "--packed",
+        action="store_true",
+        help="flat-buffer state: one kernel launch and one collective per "
+        "SlowMo boundary instead of one per parameter leaf",
+    )
     ap.add_argument("--ckpt", default="")
     ap.add_argument(
         "--mesh",
@@ -63,6 +69,7 @@ def main():
         slowmo.preset(args.algo, num_workers=args.workers, tau=args.tau, beta=args.beta),
         alpha=args.alpha,
         param_dtype=cfg.dtype if args.full else jnp.float32,
+        packed=args.packed,
     )
     tc = TrainConfig(
         total_rounds=args.rounds, per_worker_batch=args.batch, seq_len=args.seq,
@@ -79,7 +86,16 @@ def main():
 
     state = None
     if args.ckpt and ckpt_lib.exists(args.ckpt):
-        state, meta = ckpt_lib.restore(args.ckpt, like=trainer.init_state())
+        # checkpoints are always tree-layout: validate against an unpacked
+        # template and let restore_state re-pack for a --packed trainer.
+        template = trainer.init_state()
+        if trainer.pack is not None:
+            from ..core import packing
+
+            template = packing.unpack_state(trainer.pack, template)
+        state, meta = ckpt_lib.restore_state(
+            args.ckpt, like=template, pack=trainer.pack
+        )
         done = int(meta.get("step") or 0)
         print(f"resuming from {args.ckpt} at round {done}")
         if done >= args.rounds:

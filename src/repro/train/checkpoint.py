@@ -1,6 +1,11 @@
 """Checkpointing: flat-key .npz snapshots of arbitrary pytrees (SlowMoState
 included), host-gathered.  No external deps; restore reconstructs the exact
-tree structure from the saved treedef repr + flat arrays."""
+tree structure from the saved treedef repr + flat arrays.
+
+Checkpoints are ALWAYS written in the tree (per-leaf) layout: packed
+flat-buffer states (``repro.core.packing``) are unpacked on save and
+re-packed on restore (``save_state`` / ``restore_state``), so a snapshot
+taken by a packed run resumes in a per-leaf run and vice versa."""
 from __future__ import annotations
 
 import json
@@ -10,6 +15,8 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from ..core import packing
 
 PyTree = Any
 
@@ -57,3 +64,26 @@ def restore(path: str, like: PyTree | None = None) -> tuple[PyTree, dict]:
 
 def exists(path: str) -> bool:
     return os.path.exists(path + ".npz") and os.path.exists(path + ".treedef")
+
+
+def save_state(path: str, state: PyTree, step: int | None = None, *, pack=None) -> None:
+    """Save a SlowMoState in the canonical tree layout.
+
+    ``pack`` (the state's PackSpec) converts a packed flat-buffer state back
+    to the per-leaf layout first, so the on-disk format is independent of the
+    execution mode that produced it."""
+    if pack is not None and packing.is_packed(state.params):
+        state = packing.unpack_state(pack, state)
+    save(path, state, step=step)
+
+
+def restore_state(
+    path: str, like: PyTree | None = None, *, pack=None
+) -> tuple[PyTree, dict]:
+    """Restore a tree-layout snapshot; with ``pack``, return it packed (the
+    layout a ``packed=True`` round function consumes).  ``like`` must be a
+    TREE-layout template (what ``save_state`` wrote)."""
+    state, meta = restore(path, like=like)
+    if pack is not None:
+        state = packing.pack_state(pack, jax.tree.map(jax.numpy.asarray, state))
+    return state, meta

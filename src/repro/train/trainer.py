@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import slowmo
+from ..core import packing, slowmo
 from ..core.slowmo import SlowMoConfig, SlowMoState
 from ..models.api import ModelBundle
 from . import checkpoint as ckpt_lib
@@ -78,21 +78,34 @@ class Trainer:
         self.eval_fn = eval_fn
         self.layout = layout
         self.lr_fn = make_lr_fn(tc, smcfg.tau)
+        self.pack = None
+        if smcfg.packed:
+            # flat-buffer execution: the static packing index is derived from
+            # the model's parameter SHAPES (no init FLOPs spent here).
+            pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            self.pack = slowmo.make_state_pack_spec(smcfg, pshapes)
         if layout is not None:
             # mesh-lowered path: worker axis sharded over the layout's mesh,
             # collectives lower to all-reduce / collective-permute.
             from ..distributed import spmd
 
             self.round_fn = spmd.make_spmd_slowmo_round(
-                smcfg, model.loss_fn, layout
+                smcfg, model.loss_fn, layout, pack=self.pack
             )
         else:
-            self.round_fn = jax.jit(slowmo.make_slowmo_round(smcfg, model.loss_fn))
+            # the state argument is donated: XLA writes the next round's
+            # state into the same buffers (in/out shapes match 1:1), so no
+            # per-round full-state copy.  Donation deletes the input state
+            # on every backend (CPU included) — run() always rebinds.
+            self.round_fn = jax.jit(
+                slowmo.make_slowmo_round(self.smcfg, model.loss_fn, pack=self.pack),
+                donate_argnums=0,
+            )
         self.history: list[dict] = []
 
     def init_state(self, key=None) -> SlowMoState:
         params = self.model.init(key or jax.random.PRNGKey(0))
-        return slowmo.init_slowmo(self.smcfg, params)
+        return slowmo.init_slowmo(self.smcfg, params, pack=self.pack)
 
     def _batches(self, round_idx: int) -> PyTree:
         raw = self.sampler(
@@ -108,9 +121,14 @@ class Trainer:
         Passing a restored ``state`` (e.g. from ``checkpoint.restore``)
         resumes at the round recorded in ``state.outer_step`` — the LR
         schedule and sampler continue from the absolute round index, so a
-        resumed run reproduces an uninterrupted one.
+        resumed run reproduces an uninterrupted one.  Checkpoints always use
+        the tree layout; a packed trainer packs a restored tree-layout state
+        here and unpacks before saving, so checkpoints are interchangeable
+        between execution modes.
         """
         state = state if state is not None else self.init_state()
+        if self.pack is not None and not packing.is_packed(state.params):
+            state = packing.pack_state(self.pack, jax.tree.map(jnp.asarray, state))
         rounds = rounds if rounds is not None else self.tc.total_rounds
         start = int(jax.device_get(state.outer_step))
         t0 = time.perf_counter()
@@ -128,7 +146,9 @@ class Trainer:
             if "drift" in metrics:
                 rec["drift"] = float(metrics["drift"])
             if self.eval_fn and (r % max(self.tc.log_every, 1) == 0 or r == start + rounds - 1):
-                rec["eval"] = float(self.eval_fn(_eval_params(self.smcfg, state)))
+                rec["eval"] = float(
+                    self.eval_fn(_eval_params(self.smcfg, state, self.pack))
+                )
             self.history.append(rec)
             if self.tc.log_every and r % self.tc.log_every == 0:
                 drift = f" drift={rec.get('drift', float('nan')):.3e}" if "drift" in rec else ""
@@ -138,16 +158,20 @@ class Trainer:
                     f"loss {rec['loss']:.4f} lr {rec['lr']:.2e}{drift}{ev}"
                 )
             if self.tc.ckpt_every and self.tc.ckpt_path and (r + 1) % self.tc.ckpt_every == 0:
-                ckpt_lib.save(self.tc.ckpt_path, state, step=r + 1)
+                ckpt_lib.save_state(self.tc.ckpt_path, state, step=r + 1, pack=self.pack)
         return state
 
 
-def _eval_params(smcfg: SlowMoConfig, state: SlowMoState) -> PyTree:
+def _eval_params(smcfg: SlowMoConfig, state: SlowMoState, pack=None) -> PyTree:
     """Evaluation parameters: the synchronized outer iterate x_{t,0} (or the
-    worker-mean for the noaverage variant)."""
-    if smcfg.exact_average:
-        return state.outer_params
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), state.outer_params)
+    worker-mean for the noaverage variant), unpacked to the tree layout the
+    model's loss/forward functions speak."""
+    outer = state.outer_params
+    if not smcfg.exact_average:
+        outer = jax.tree.map(lambda x: jnp.mean(x, axis=0), outer)
+    if pack is not None:
+        outer = pack.unpack(outer)
+    return outer
 
 
 def final_loss(history: list[dict]) -> float:

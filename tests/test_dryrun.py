@@ -83,7 +83,9 @@ def test_dryrun_small_mesh_all_families():
         capture_output=True,
         text=True,
         timeout=900,
-        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"), "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+        # JAX_PLATFORMS=cpu keeps the bundled libtpu from probing the GCP
+        # metadata server for minutes in the stripped subprocess env
+        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"), "PATH": os.environ.get("PATH", "/usr/bin:/bin"), "JAX_PLATFORMS": "cpu"},
         cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

@@ -1,0 +1,174 @@
+"""Packed flat-buffer state on the mesh (shard_map) backend.
+
+Runs in SUBPROCESSES with 8 placeholder host-CPU devices.  Pins the
+acceptance criteria of the packing refactor:
+
+* packed mesh round == per-leaf array-axis round (1e-5) after 3 rounds on
+  the 8-device host mesh;
+* the exact-average boundary lowers to EXACTLY ONE large all-reduce on the
+  packed path (the only other all-reduce is the scalar loss pmean), while
+  the per-leaf path pays one per parameter leaf;
+* gossip rolls move one buffer (one collective-permute per hop branch, not
+  one per leaf) and AR averages one gradient buffer per step;
+* ``average_dtype=bf16`` halves the bytes of that single boundary
+  all-reduce.
+
+The exact-average pin runs in tier-1 (one subprocess case, ~1 min); the
+gossip/AR/bf16 sweep costs several compiles and is marked ``slow`` (CI runs
+it on main pushes).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core import slowmo, packing
+from repro.distributed import spmd, hlo_analysis
+from repro.launch.mesh import make_spmd_layout
+
+assert len(jax.devices()) == 8
+W, D, B = 8, 48, 4
+BIG = 1024  # bytes; above this = parameter traffic, not scalar reductions
+
+def loss_fn(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    pred = h @ params["w2"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+def make_batches(seed, tau):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (tau, W, B, D))
+    return {"x": x, "y": jnp.sum(x, -1, keepdims=True) * 0.1}
+
+# three leaves, two of them > BIG bytes (48*48*4 = 9216 B each)
+params0 = {
+    "w1": 0.1 * jax.random.normal(jax.random.PRNGKey(0), (D, D)),
+    "w2": 0.1 * jax.random.normal(jax.random.PRNGKey(1), (D, D)),
+    "b": jnp.zeros((D,)),
+}
+layout = make_spmd_layout(W)
+
+def big_collectives(fn, state, b):
+    # pre-optimization HLO: issued collectives with issued dtypes (XLA:CPU's
+    # float normalization rewrites bf16 all-reduces to f32 when optimizing)
+    lowered = fn.build(state, b).lower(state, b, jnp.float32(0.1))
+    cb = hlo_analysis.collective_bytes(hlo_analysis.lowered_hlo_text(lowered))
+    return cb["_counts"], cb["_sizes"]
+
+def run_case(name):
+    cfg = slowmo.preset(name, num_workers=W, tau=3)
+    pcfg = dataclasses.replace(cfg, packed=True)
+    spec = slowmo.make_state_pack_spec(pcfg, params0)
+    st_t = slowmo.init_slowmo(cfg, params0)
+    st_p = slowmo.init_slowmo(pcfg, params0, pack=spec)
+    fn_t = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
+    fn_p = spmd.make_spmd_slowmo_round(pcfg, loss_fn, layout, pack=spec)
+    for r in range(3):
+        b = make_batches(r, cfg.tau)
+        st_t, met_t = fn_t(st_t, b, 0.1)
+        st_p, met_p = fn_p(st_p, b, 0.1)
+    up = packing.unpack_state(spec, st_p)
+    flat_t, _ = jax.tree_util.tree_flatten_with_path(st_t)
+    flat_p = jax.tree.leaves(up)
+    assert len(flat_t) == len(flat_p)
+    for (path, a), m in zip(flat_t, flat_p):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(m, np.float32),
+            atol=1e-5, rtol=1e-5,
+            err_msg=f"{name}: {jax.tree_util.keystr(path)}")
+    assert abs(float(met_t["loss"]) - float(met_p["loss"])) < 1e-4, name
+
+    counts, sizes = big_collectives(fn_p, st_p, b)
+    big_ar = [s for s in sizes["all-reduce"] if s > BIG]
+    buf_bytes = spec.rows("float32") * packing.LANES * 4
+    if name == "ar_sgd":
+        # per-step packed gradient all-reduce + the boundary average
+        assert len(big_ar) == 2 and all(s == buf_bytes for s in big_ar), (name, big_ar)
+    else:
+        # EXACTLY ONE large all-reduce: the packed boundary average
+        assert len(big_ar) == 1 and big_ar[0] == buf_bytes, (name, big_ar)
+        assert counts["all-reduce"] == 2, (name, counts)  # + scalar loss pmean
+    if name == "sgp+slowmo":
+        # one buffer + one w scalar per static hop branch (3 hops for W=8),
+        # NOT one per parameter leaf (would be 4 per branch)
+        assert counts["collective-permute"] == 6, counts
+    print("PACKED-SPMD-OK", name, "big-ar:", big_ar)
+"""
+
+FAST_CASE = r"""
+run_case("local_sgd+slowmo")
+# per-leaf path for contrast: one large all-reduce PER LEAF
+cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=3)
+fn_tm = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout)
+st_tm = slowmo.init_slowmo(cfg, params0)
+b = make_batches(0, cfg.tau)
+counts_t, sizes_t = big_collectives(fn_tm, st_tm, b)
+assert sum(1 for s in sizes_t["all-reduce"] if s > BIG) == 2, sizes_t
+print("ALL-OK")
+"""
+
+SWEEP_CASES = r"""
+run_case("sgp+slowmo")
+run_case("ar_sgd")
+
+# bf16 boundary collective: the one large all-reduce halves its bytes
+cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2)
+recs = {}
+for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
+    pcfg = dataclasses.replace(cfg, packed=True, average_dtype=avg)
+    spec = slowmo.make_state_pack_spec(pcfg, params0)
+    st = slowmo.init_slowmo(pcfg, params0, pack=spec)
+    fn = spmd.make_spmd_slowmo_round(pcfg, loss_fn, layout, pack=spec)
+    b = make_batches(0, pcfg.tau)
+    _, sizes = big_collectives(fn, st, b)
+    recs[key] = [s for s in sizes["all-reduce"] if s > BIG]
+assert len(recs["f32"]) == len(recs["bf16"]) == 1
+assert recs["bf16"][0] * 2 == recs["f32"][0], recs
+print("PACKED-BF16-OK", recs)
+print("ALL-OK")
+"""
+
+
+def _run(script):
+    return subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            # without this, the bundled libtpu probes the GCP metadata
+            # server for minutes (30 curl retries per variable) before
+            # falling back to CPU — the stripped env drops the parent's
+            # JAX_PLATFORMS and turns a 30 s test into an 8 min one
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+
+
+def test_packed_mesh_exact_average_one_allreduce():
+    proc = _run(PRELUDE + FAST_CASE)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout
+    assert proc.stdout.count("PACKED-SPMD-OK") == 1
+
+
+@pytest.mark.slow
+def test_packed_mesh_gossip_ar_and_bf16():
+    proc = _run(PRELUDE + SWEEP_CASES)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout
+    assert proc.stdout.count("PACKED-SPMD-OK") == 2
+    assert "PACKED-BF16-OK" in proc.stdout

@@ -62,7 +62,7 @@ for name, overrides, layout in CASES:
     cfg = dataclasses.replace(slowmo.preset(name, num_workers=W, tau=3), **overrides)
     params0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (D,)), "b": jnp.zeros(())}
     state_a = slowmo.init_slowmo(cfg, params0)
-    state_m = jax.tree.map(lambda x: x, state_a)
+    state_m = jax.tree.map(jnp.array, state_a)  # real copy: fn_m donates its state
     fn_a = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
     fn_m = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout)
     for r in range(3):
@@ -100,7 +100,10 @@ def test_spmd_backend_matches_axis_oracle():
         capture_output=True,
         text=True,
         timeout=900,
-        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"), "PATH": os.environ.get("PATH", "/usr/bin:/bin")},
+        # JAX_PLATFORMS=cpu: without it the stripped env lets the bundled
+        # libtpu probe the GCP metadata server for ~8 minutes before falling
+        # back to CPU
+        env={"PYTHONPATH": os.path.join(REPO_ROOT, "src"), "PATH": os.environ.get("PATH", "/usr/bin:/bin"), "JAX_PLATFORMS": "cpu"},
         cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

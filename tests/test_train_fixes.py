@@ -98,8 +98,9 @@ class TestGradClipWiring:
         )
         t = Trainer(dummy_model(loss_scale=1e6), smcfg, tc, dummy_sampler)
         state0 = t.init_state()
+        w0 = np.asarray(state0.params["w"][0])  # round_fn donates state0
         state1, _ = t.round_fn(state0, t._batches(0), 0.5)
-        delta = np.asarray(state1.params["w"][0] - state0.params["w"][0])
+        delta = np.asarray(state1.params["w"][0]) - w0
         assert 0.1 < np.linalg.norm(delta) <= 0.5 * (1 + 1e-4)
 
     def test_unclipped_for_reference(self):
@@ -111,8 +112,9 @@ class TestGradClipWiring:
                          lr=0.5, log_every=0)
         t = Trainer(dummy_model(loss_scale=1e6), smcfg, tc, dummy_sampler)
         state0 = t.init_state()
+        w0 = np.asarray(state0.params["w"][0])  # round_fn donates state0
         state1, _ = t.round_fn(state0, t._batches(0), 0.5)
-        delta = np.asarray(state1.params["w"][0] - state0.params["w"][0])
+        delta = np.asarray(state1.params["w"][0]) - w0
         assert np.linalg.norm(delta) > 1e3  # the bug this guards against
 
 
