@@ -25,10 +25,21 @@ backend, which has no per-leaf collective dispatch to save, stays within
 collective counts/bytes in the JSON are deterministic; real-hardware ICI
 latency is the ROADMAP follow-on.
 
+``--layout`` sweeps worker topologies on the same 8 devices at the SAME
+global batch: ``flat`` = 8 one-device workers, ``hierarchical`` = ``--pods``
+workers of ``--dp`` devices each (per-worker batch scaled by ``--dp``, so
+per-device batch matches).  Hierarchical rounds pay one extra within-pod
+gradient all-reduce per inner step but issue the boundary/gossip collectives
+over ``--pods`` devices instead of 8 — the flat-vs-hierarchical round-time
+and traffic trade is recorded per preset in the JSON (``layout`` field +
+``hierarchical_vs_flat`` summary).  Host-CPU numbers rank topologies only;
+real ICI makes the within-pod hop much cheaper than the cross-pod one.
+
 Results go to BENCH_packed_round.json (``--out``).  ``--smoke`` runs one
 tiny round per backend/layout so CI can keep this harness from rotting.
 
-    PYTHONPATH=src python benchmarks/bench_spmd_round.py [--workers 8] [--tau 12]
+    PYTHONPATH=src python benchmarks/bench_spmd_round.py [--workers 8] [--tau 12] \
+        [--layout flat|hierarchical|both]
 """
 import argparse
 import dataclasses
@@ -43,7 +54,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core import slowmo  # noqa: E402
 from repro.distributed import hlo_analysis, spmd  # noqa: E402
-from repro.launch.mesh import make_spmd_layout  # noqa: E402
+from repro.launch.mesh import make_hierarchical_layout, make_spmd_layout  # noqa: E402
 
 BIG = 1024  # bytes; collectives above this are parameter traffic, not scalars
 
@@ -92,8 +103,9 @@ def time_fn(fn, state, batches, iters=20, warmup=3):
     return sorted(times)[len(times) // 2]
 
 
-def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters):
-    """One (preset, packed, average_dtype) sweep point; returns a record."""
+def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters,
+             layout_name="flat"):
+    """One (preset, packed, average_dtype, layout) sweep point."""
     cfg = dataclasses.replace(
         slowmo.preset(preset, num_workers=layout.num_workers, tau=batches["x"].shape[0]),
         packed=packed,
@@ -129,6 +141,9 @@ def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters
     counts, sizes = cb["_counts"], cb["_sizes"]
     return {
         "preset": preset,
+        "layout": layout_name,
+        "num_workers": layout.num_workers,
+        "batch_shard": layout.batch_shard,
         "packed": packed,
         "average_dtype": avg_dtype,
         "axis_ms": t_axis * 1e3,
@@ -151,6 +166,16 @@ def main():
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--out", default="BENCH_packed_round.json")
     ap.add_argument(
+        "--layout",
+        default="flat",
+        choices=("flat", "hierarchical", "both"),
+        help="worker topology sweep: 'hierarchical' = --pods workers of --dp "
+        "devices each (within-pod grad all-reduce every step), same global "
+        "batch as flat",
+    )
+    ap.add_argument("--pods", type=int, default=0, help="hierarchical pod count (0 = workers // dp)")
+    ap.add_argument("--dp", type=int, default=2, help="hierarchical data shards per pod")
+    ap.add_argument(
         "--smoke",
         action="store_true",
         help="CI guard: one tiny round, both backends, packed + per-leaf",
@@ -163,68 +188,115 @@ def main():
             args.out = "BENCH_packed_round_smoke.json"
 
     W = args.workers
-    loss_fn, params0, batches = make_problem(W, args.tau, args.dim, layers=args.layers)
-    layout = make_spmd_layout(W)
+    pods = args.pods or max(W // args.dp, 1)
+    if args.layout in ("hierarchical", "both") and pods * args.dp != W:
+        raise SystemExit(
+            f"--pods x --dp ({pods} x {args.dp}) must equal --workers {W}: "
+            "the flat-vs-hierarchical comparison is only like-for-like at "
+            "matched device count and global batch"
+        )
     print(
         f"workers={W} tau={args.tau} d={args.dim} iters={args.iters} "
         f"devices={len(jax.devices())}"
     )
+
+    # same GLOBAL batch per topology: flat = W workers x B samples,
+    # hierarchical = pods workers x (B * dp) samples split over dp devices —
+    # per-device batch identical, so round times compare like for like.
+    B = 8
+    sweeps = []
+    if args.layout in ("flat", "both"):
+        sweeps.append(
+            ("flat", make_spmd_layout(W), make_problem(W, args.tau, args.dim, B, args.layers))
+        )
+    if args.layout in ("hierarchical", "both"):
+        sweeps.append(
+            ("hierarchical", make_hierarchical_layout(pods, args.dp),
+             make_problem(pods, args.tau, args.dim, B * args.dp, args.layers))
+        )
 
     presets = ("local_sgd+slowmo",) if args.smoke else (
         "local_sgd+slowmo", "sgp+slowmo", "ar_sgd",
     )
     dtypes = ("f32",) if args.smoke else ("f32", "bf16")
     records = []
-    for preset in presets:
-        b = batches
-        cfg0 = slowmo.preset(preset, num_workers=W, tau=args.tau)
-        if cfg0.tau != args.tau:
-            b = jax.tree.map(lambda x: x[: cfg0.tau], batches)
-        for packed in (False, True):
-            for avg in dtypes:
-                rec = run_case(
-                    preset, packed, avg, layout, loss_fn, params0, b, args.iters
-                )
-                records.append(rec)
-                print(
-                    f"{preset:18s} packed={int(packed)} avg={avg:4s} "
-                    f"axis {rec['axis_ms']:8.2f} ms  mesh {rec['mesh_ms']:8.2f} ms  "
-                    f"ar n={rec['all_reduce_count']} big={rec['big_all_reduce_count']} "
-                    f"({rec['big_all_reduce_bytes']} B)  "
-                    f"cp n={rec['collective_permute_count']}"
-                )
+    for layout_name, layout, (loss_fn, params0, batches) in sweeps:
+        for preset in presets:
+            b = batches
+            cfg0 = slowmo.preset(preset, num_workers=layout.num_workers, tau=args.tau)
+            if cfg0.tau != args.tau:
+                b = jax.tree.map(lambda x: x[: cfg0.tau], batches)
+            for packed in (False, True):
+                for avg in dtypes:
+                    rec = run_case(
+                        preset, packed, avg, layout, loss_fn, params0, b,
+                        args.iters, layout_name=layout_name,
+                    )
+                    records.append(rec)
+                    print(
+                        f"{preset:18s} {layout_name:12s} packed={int(packed)} avg={avg:4s} "
+                        f"axis {rec['axis_ms']:8.2f} ms  mesh {rec['mesh_ms']:8.2f} ms  "
+                        f"ar n={rec['all_reduce_count']} big={rec['big_all_reduce_count']} "
+                        f"({rec['big_all_reduce_bytes']} B)  "
+                        f"cp n={rec['collective_permute_count']}"
+                    )
 
-    # headline comparisons: packed vs per-leaf latency, bf16 traffic halving
-    def find(preset, packed, avg):
+    # headline comparisons: packed vs per-leaf latency, bf16 traffic halving,
+    # flat vs hierarchical round time at matched global batch
+    def find(preset, packed, avg, layout_name="flat"):
         for r in records:
-            if (r["preset"], r["packed"], r["average_dtype"]) == (preset, packed, avg):
+            if (r["preset"], r["packed"], r["average_dtype"], r["layout"]) == (
+                preset, packed, avg, layout_name,
+            ):
                 return r
         return None
 
     summary = {}
-    for preset in presets:
-        t, p = find(preset, False, "f32"), find(preset, True, "f32")
-        if t and p:
-            summary[preset] = {
+    # one packed-vs-tree block per (preset, layout), same schema for every
+    # layout; the flat entries keep their bare-preset keys for continuity
+    # with earlier BENCH_packed_round.json artifacts
+    for layout_name, _, _ in sweeps:
+        for preset in presets:
+            t = find(preset, False, "f32", layout_name)
+            p = find(preset, True, "f32", layout_name)
+            if not (t and p):
+                continue
+            key = preset if layout_name == "flat" else f"{preset}@{layout_name}"
+            summary[key] = {
                 "mesh_speedup_packed": t["mesh_ms"] / p["mesh_ms"],
                 "axis_speedup_packed": t["axis_ms"] / p["axis_ms"],
                 "big_all_reduce_count_tree": t["big_all_reduce_count"],
                 "big_all_reduce_count_packed": p["big_all_reduce_count"],
             }
-            pb = find(preset, True, "bf16")
+            pb = find(preset, True, "bf16", layout_name)
             if pb and p["big_all_reduce_bytes"]:
-                summary[preset]["bf16_traffic_ratio"] = (
+                summary[key]["bf16_traffic_ratio"] = (
                     pb["big_all_reduce_bytes"] / p["big_all_reduce_bytes"]
                 )
             print(
-                f"{preset}: packed mesh speedup "
-                f"{summary[preset]['mesh_speedup_packed']:.2f}x, big all-reduces "
+                f"{key}: packed mesh speedup "
+                f"{summary[key]['mesh_speedup_packed']:.2f}x, big all-reduces "
                 f"{t['big_all_reduce_count']} -> {p['big_all_reduce_count']}"
                 + (
-                    f", bf16 traffic x{summary[preset]['bf16_traffic_ratio']:.2f}"
-                    if "bf16_traffic_ratio" in summary[preset]
+                    f", bf16 traffic x{summary[key]['bf16_traffic_ratio']:.2f}"
+                    if "bf16_traffic_ratio" in summary[key]
                     else ""
                 )
+            )
+    for preset in presets:
+        fl, hi = find(preset, True, "f32"), find(preset, True, "f32", "hierarchical")
+        if fl and hi:
+            summary.setdefault("hierarchical_vs_flat", {})[preset] = {
+                "mesh_round_ratio": hi["mesh_ms"] / fl["mesh_ms"],
+                "big_all_reduce_bytes_ratio": (
+                    hi["big_all_reduce_bytes"] / fl["big_all_reduce_bytes"]
+                    if fl["big_all_reduce_bytes"]
+                    else None
+                ),
+            }
+            print(
+                f"{preset}: hierarchical/flat packed mesh round "
+                f"x{summary['hierarchical_vs_flat'][preset]['mesh_round_ratio']:.2f}"
             )
 
     with open(args.out, "w") as f:

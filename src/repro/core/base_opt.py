@@ -15,6 +15,13 @@ leading worker axis ``W`` (the update is elementwise, so no vmap is needed).
 The momentum/second-moment buffers mirror the parameter pytree (leading ``W``
 included); the Adam step counter is a scalar (shared by all workers — workers
 always take the same number of steps).
+
+Gradients arrive here already worker-complete: on hierarchical (pod, data)
+mesh layouts the inner step all-reduces them over the pod's batch shards
+(``CommBackend.grad_mean``) BEFORE clipping/momentum, so ``_clip``'s
+per-worker global norm, the momentum buffers, and the applied step are
+computed on the full pod-batch gradient — every data replica of a worker
+derives the identical update, keeping its state replicas bitwise in sync.
 """
 from __future__ import annotations
 

@@ -16,10 +16,20 @@ run in two modes:
   axis of size ``num_workers // num_worker_devices`` (1 in the one-worker-
   per-device layouts), so the algorithm code is identical in both modes.
 
-Both backends implement the same five primitives; everything else in
+Both backends implement the same primitive set; everything else in
 ``slowmo.py`` / ``gossip.py`` / ``base_opt.py`` is backend-agnostic.  See
 ``repro.distributed.spmd`` for the shard_map wrapper that pairs the
 ``MeshBackend`` with PartitionSpecs.
+
+Hierarchical (pod, data) layouts add one more seam: ``grad_mean`` — the
+every-inner-step gradient sync.  When the backend carries ``batch_axes``
+(the mesh axes each worker's batch is sharded over), ``grad_mean`` is a
+``lax.pmean`` over those axes: every device inside a pod ends each step with
+the gradient of the FULL pod batch, so a pod behaves exactly like one
+bigger-batch SlowMo worker while the SlowMo collectives (exact average,
+gossip rolls, outer momentum) stay on the worker (``pod``) axes only.  On
+the oracle (and on mesh layouts without batch axes) each worker already
+consumes its whole batch locally, so ``grad_mean`` is the identity.
 
 The primitives are also LAYOUT-agnostic: they tree-map over whatever leaves
 the state carries.  On the per-leaf tree layout that is one collective per
@@ -45,6 +55,7 @@ class AxisBackend:
     """Array-axis oracle: workers = leading axis 0 of every leaf."""
 
     kind = "axis"
+    batch_axes: tuple[str, ...] = ()  # workers consume their batch whole
 
     def __init__(self, num_workers: int):
         self.num_workers = num_workers
@@ -57,6 +68,12 @@ class AxisBackend:
     def pmean_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
         """Mean over workers of an already-locally-averaged scalar."""
         return x
+
+    def grad_mean(self, tree: PyTree) -> PyTree:
+        """Within-worker gradient sync over batch shards (hierarchical
+        layouts).  The oracle has no batch axes — each worker's gradient is
+        already the mean over its whole batch — so this is the identity."""
+        return tree
 
     def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
         """Sum over workers of a per-shard scalar."""
@@ -104,11 +121,25 @@ class MeshBackend:
     Rolls require one worker per device along the worker axes (local worker
     axis of size 1); pure-averaging bases (local/ar) also work with several
     workers per device.
+
+    ``batch_axes`` (hierarchical layouts) are the additional mesh axes each
+    worker's batch is sharded over: ``grad_mean`` all-reduces gradients over
+    them every inner step (within-pod DP sync), and scalar loss means reduce
+    over worker AND batch axes jointly.  Parameter-state collectives (exact
+    average, gossip rolls, buffer averaging) stay on the worker axes only —
+    the per-worker state is REPLICATED over the batch axes and every batch-
+    axis replica computes the identical update once gradients are synced.
     """
 
     kind = "mesh"
 
-    def __init__(self, axis_names: tuple[str, ...], num_workers: int, num_devices: int):
+    def __init__(
+        self,
+        axis_names: tuple[str, ...],
+        num_workers: int,
+        num_devices: int,
+        batch_axes: tuple[str, ...] = (),
+    ):
         if num_workers % num_devices:
             raise ValueError(
                 f"num_workers={num_workers} not divisible by the "
@@ -117,11 +148,17 @@ class MeshBackend:
         self.axis_names = tuple(axis_names)
         self.num_workers = num_workers
         self.num_devices = num_devices
+        self.batch_axes = tuple(batch_axes)
         # jax collectives accept a single name or a tuple of names (the
         # flattened, row-major index over the named axes).
         self.axis_entry = (
             self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
         )
+        self.batch_entry = (
+            self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        ) if self.batch_axes else None
+        scalar_axes = self.axis_names + self.batch_axes
+        self.scalar_entry = scalar_axes if len(scalar_axes) > 1 else scalar_axes[0]
 
     @property
     def local_workers(self) -> int:
@@ -129,7 +166,19 @@ class MeshBackend:
 
     # -- reductions ---------------------------------------------------------
     def pmean_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
-        return jax.lax.pmean(x, self.axis_entry)
+        # worker AND batch axes: with equal-size batch shards, the mean of
+        # per-shard means over (pod, data) equals the mean of per-worker
+        # (full pod batch) means — matching the oracle's scalar.
+        return jax.lax.pmean(x, self.scalar_entry)
+
+    def grad_mean(self, tree: PyTree) -> PyTree:
+        """Within-pod gradient sync: mean over the batch (``data``) axes —
+        the hierarchical layout's every-inner-step all-reduce.  One
+        collective per leaf (ONE total on packed state).  No-op on layouts
+        without batch axes."""
+        if not self.batch_axes:
+            return tree
+        return jax.tree.map(lambda g: jax.lax.pmean(g, self.batch_entry), tree)
 
     def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
         return jax.lax.psum(x, self.axis_entry)
@@ -146,10 +195,14 @@ class MeshBackend:
         return jax.tree.map(avg, tree)
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
+        # worker AND batch axes in ONE collective: for AR gradient averaging
+        # this is the global batch mean directly (no separate grad_mean hop
+        # needed); for buffer averaging the batch-axis replicas are identical
+        # so the extra axes change nothing numerically.
         if x.ndim == 0:
             return x
         m = jnp.mean(x, axis=0, keepdims=True)
-        return jnp.broadcast_to(jax.lax.pmean(m, self.axis_entry), x.shape)
+        return jnp.broadcast_to(jax.lax.pmean(m, self.scalar_entry), x.shape)
 
     # -- broadcast / permute ------------------------------------------------
     def bcast(self, tree: PyTree, dtype) -> PyTree:

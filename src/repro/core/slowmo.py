@@ -209,8 +209,19 @@ def make_inner_step(
         if pack is not None:
             grads = pack.pack(grads, dtype=jnp.float32)
         if cfg.base == "ar":
-            # ALLREDUCE baseline: average gradients across workers every step.
+            # ALLREDUCE baseline: average gradients across workers every
+            # step.  mean_keepdims reduces over worker AND batch axes in one
+            # collective, so this subsumes the hierarchical within-pod sync.
             grads = jax.tree.map(backend.mean_keepdims, grads)
+        else:
+            # Hierarchical layouts: within-pod DP sync — all-reduce the
+            # gradients over the backend's batch axes so every device in a
+            # pod steps with the gradient of the full pod batch (identity on
+            # the oracle and on layouts without batch axes).  Runs AFTER
+            # packing (one collective on packed state) and BEFORE clipping/
+            # momentum inside apply_step, so the inner optimizer sees exactly
+            # the bigger-batch worker's gradient.
+            grads = backend.grad_mean(grads)
         params, inner = base_opt.apply_step(
             cfg.inner,
             inner,
@@ -329,14 +340,25 @@ def make_slowmo_round(
     per-step collectives are also one-per-buffer; the communication-free
     ``local`` base runs its inner loop on the tree layout and converts at
     the round boundary only — a per-step unpack/pack there would cost two
-    full-state copies per step for zero collective savings.
+    full-state copies per step for zero collective savings.  On a
+    hierarchical backend (``batch_axes``) no base is communication-free —
+    every step all-reduces gradients within the pod — so ``local`` also runs
+    fully packed there.
     """
     if cfg.packed and pack is None:
         raise ValueError("cfg.packed requires the PackSpec the state was built with")
     if pack is not None and not cfg.packed:
         raise ValueError("got a PackSpec but cfg.packed is False")
     backend = backend or comm.AxisBackend(cfg.num_workers)
-    boundary_only = pack is not None and cfg.base == "local"
+    # boundary-only packing is a win exactly when the inner loop is
+    # communication-free; a hierarchical backend (batch_axes) all-reduces
+    # gradients EVERY inner step, so even the 'local' base then runs fully
+    # packed to keep that per-step sync at one collective per buffer.
+    boundary_only = (
+        pack is not None
+        and cfg.base == "local"
+        and not getattr(backend, "batch_axes", ())
+    )
     step_fn = make_inner_step(cfg, loss_fn, backend, None if boundary_only else pack)
 
     def round_fn(state: SlowMoState, batches: PyTree, lr):

@@ -11,6 +11,8 @@ import dataclasses
 import re
 from typing import Any
 
+import numpy as np
+
 # v5e per-chip constants
 PEAK_FLOPS = 197e12  # bf16
 HBM_BW = 819e9
@@ -47,6 +49,110 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[\d, ]*\},?\s*)*)\}")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def _parse_replica_groups(line: str):
+    """Replica groups of one HLO collective line, as a tuple of id-tuples.
+
+    Handles both textual forms XLA emits: explicit braces
+    (``replica_groups={{0,1},{2,3}}``) and the iota form
+    (``replica_groups=[2,2]<=[4]`` / ``...<=[2,2]T(1,0)``).  Returns ``None``
+    when the line carries no replica_groups attribute, and ``()`` for XLA's
+    empty form ``replica_groups={}``, which means ALL replicas form one
+    group — consumers comparing against ``mesh_axis_groups`` over every mesh
+    axis must treat ``()`` as that full-device group (see the bucketing in
+    tests/test_hierarchical_spmd.py)."""
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return tuple(
+            tuple(int(x) for x in g.split(",") if x.strip())
+            for g in re.findall(r"\{([\d, ]*)\}", m.group(1))
+        )
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return tuple(
+            tuple(int(x) for x in row) for row in ids.reshape(n_groups, group_size)
+        )
+    return None
+
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?\s*)+)\}")
+
+
+def _parse_source_target_pairs(line: str):
+    """(source, target) device pairs of a collective-permute line, or None."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    return tuple(
+        (int(s), int(t))
+        for s, t in re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+    )
+
+
+def normalize_groups(groups) -> frozenset:
+    """Order-insensitive form of a replica-group list for comparisons (the
+    order of ids within an all-reduce group is semantically irrelevant)."""
+    return frozenset(frozenset(g) for g in groups)
+
+
+def mesh_axis_groups(mesh, axes) -> tuple[tuple[int, ...], ...]:
+    """Expected replica groups (device ids) of a collective reducing over
+    ``axes`` of ``mesh``: one group per slice along the remaining axes.
+
+    This is what lets tests assert the TWO-LEVEL structure of hierarchical
+    layouts — inner-step gradient all-reduces grouped over ``('data',)``
+    only, boundary all-reduces grouped over ``('pod',)`` only — rather than
+    bare op counts."""
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    names = list(mesh.axis_names)
+    red = [names.index(a) for a in axes]
+    keep = [i for i in range(ids.ndim) if i not in red]
+    moved = ids.transpose(keep + red)
+    group_size = int(np.prod([ids.shape[i] for i in red], dtype=np.int64))
+    return tuple(
+        tuple(int(x) for x in row) for row in moved.reshape(-1, group_size)
+    )
+
+
+def collective_ops(hlo_text: str) -> list[dict[str, Any]]:
+    """Every collective op in the HLO text, in program order, with its kind,
+    result bytes, and (for grouped collectives) parsed replica groups.
+
+    The per-op view behind ``collective_bytes``: use this when an assertion
+    needs WHICH devices a collective spans (e.g. the hierarchical layout's
+    data-only gradient sync vs pod-only boundary average), not just totals.
+    ``-start`` async forms are counted; ``-done`` forms carry no new traffic
+    and are skipped."""
+    ops: list[dict[str, Any]] = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not line or "=" not in line:
+            continue
+        for op in COLLECTIVE_OPS:
+            m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
+            if m:
+                ops.append(
+                    {
+                        "op": op,
+                        "bytes": _shape_bytes(m.group(1)),
+                        "replica_groups": _parse_replica_groups(line),
+                        "source_target_pairs": _parse_source_target_pairs(line),
+                    }
+                )
+                break
+    return ops
+
+
 def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Sum result bytes of every collective op, per op kind, from HLO text.
 
@@ -58,20 +164,11 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     out = {k: 0 for k in COLLECTIVE_OPS}
     counts = {k: 0 for k in COLLECTIVE_OPS}
     sizes = {k: [] for k in COLLECTIVE_OPS}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        if not line or "=" not in line:
-            continue
-        for op in COLLECTIVE_OPS:
-            # match ` = TYPE op(` including fusion-free plain calls, and
-            # `op-start(` async forms; skip `-done` (no new traffic)
-            m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
-            if m:
-                b = _shape_bytes(m.group(1))
-                out[op] += b
-                counts[op] += 1
-                sizes[op].append(b)
-                break
+    for rec in collective_ops(hlo_text):
+        op, b = rec["op"], rec["bytes"]
+        out[op] += b
+        counts[op] += 1
+        sizes[op].append(b)
     out["_counts"] = counts  # type: ignore[assignment]
     out["_sizes"] = sizes  # type: ignore[assignment]
     return out

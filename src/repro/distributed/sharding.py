@@ -252,24 +252,45 @@ def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyT
     )
 
 
+def _bax_entry(layout: WorkerLayout):
+    bax = layout.batch_axes
+    if not bax:
+        return None
+    return bax if len(bax) > 1 else bax[0]
+
+
+def batch_partition_spec(layout: WorkerLayout, ndim: int) -> P:
+    """THE batch-leaf rule for a ``(tau, W, B, ...)`` training-batch leaf:
+    dim 1 (the worker axis) shards over the layout's worker mesh axes, dim 2
+    (each worker's batch) over its batch axes — on the hierarchical layout
+    that is ``P(None, 'pod', 'data')``.
+
+    Single source of truth for BOTH execution paths: the GSPMD dry-run
+    (``batch_shardings``) and the shard_map mesh path (``spmd_batch_specs``)
+    wrap this one function, so they cannot disagree on which axes shard the
+    batch (they used to: the dry-run sharded B over ``data`` while the mesh
+    path replicated it).  Pinned by ``tests/test_hierarchical_spmd.py``.
+    """
+    entries = [None, _wax_entry(layout)[0]]
+    if layout.batch_axes and ndim >= 3:
+        entries.append(_bax_entry(layout))
+    return P(*entries)
+
+
 def spmd_batch_specs(layout: WorkerLayout, batches: PyTree) -> PyTree:
-    """Batch leaves are (tau, W, ...): shard W over the worker mesh axes."""
-    wentry = _wax_entry(layout)[0]
-    return jax.tree.map(lambda _: P(None, wentry), batches)
+    """PartitionSpecs of training batches entering ``shard_map``."""
+    return jax.tree.map(
+        lambda x: batch_partition_spec(layout, getattr(x, "ndim", 0)), batches
+    )
 
 
 def batch_shardings(layout: WorkerLayout, batch_shapes: PyTree) -> PyTree:
-    """Training batches: leaves (tau, W, B, ...)."""
+    """NamedShardings of training batches on the GSPMD (dry-run) path."""
     mesh = layout.mesh
-    wax = _wax_entry(layout)
-    bax = layout.batch_axes if layout.batch_axes else None
-    bentry = (bax if bax and len(bax) > 1 else (bax[0] if bax else None),)
-
-    def one(leaf):
-        rest = (None,) * (leaf.ndim - 3)
-        return NamedSharding(mesh, P(*((None,) + wax + bentry + rest)))
-
-    return jax.tree.map(one, batch_shapes)
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_partition_spec(layout, leaf.ndim)),
+        batch_shapes,
+    )
 
 
 def serve_param_shardings(layout: WorkerLayout, param_shapes: PyTree) -> PyTree:

@@ -26,9 +26,21 @@ BEFORE the first jax import, build a worker mesh with
 ``all-reduce`` / ``collective-permute`` ops (checked via
 ``distributed.hlo_analysis``).
 
-Current scope: the worker axes carry the whole mesh — model-parallel axes
-under shard_map (``auto`` axes) are a ROADMAP follow-on, so the layout's
-model axes must have size 1.
+Hierarchical layouts (``make_layout(style="hierarchical")`` /
+``launch.mesh.make_hierarchical_layout``) run through the same wrapper: the
+SlowMo worker axis shards over ``pod`` only, each worker's batch additionally
+shards over the layout's ``batch_axes`` (``data``), and the backend's
+``grad_mean`` hook all-reduces gradients over ``data`` every inner step —
+within-pod data parallelism under the slow cross-pod momentum, the paper's
+actual node-level setup (and BMUF's block structure).  A (pods, data)
+hierarchical round is numerically a flat ``pods``-worker round whose
+per-worker batch is the concatenation of the pod's data shards; equivalence
+and the two-level replica-group structure are pinned by
+``tests/test_hierarchical_spmd.py``.
+
+Current scope: worker + batch axes carry the whole mesh — model-parallel
+axes under shard_map (``auto`` axes) are a ROADMAP follow-on, so the
+layout's model axes must have size 1.
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import comm, slowmo
 from ..core.slowmo import SlowMoConfig
+from ..launch import mesh as mesh_lib
 from ..launch.mesh import WorkerLayout
 from . import sharding
 
@@ -50,11 +63,16 @@ PyTree = Any
 def _validate(cfg: SlowMoConfig, layout: WorkerLayout) -> int:
     if not layout.worker_axes:
         raise ValueError("spmd path needs a layout with worker mesh axes")
-    for a in layout.model_axes:
-        if a in layout.mesh.axis_names and layout.mesh.shape[a] != 1:
+    mesh_lib.validate_spmd_model_axes(layout)
+    for a in layout.batch_axes:
+        if a not in layout.mesh.axis_names:
             raise ValueError(
-                "spmd path does not yet compose with model parallelism: "
-                f"model axis {a!r} has size {layout.mesh.shape[a]}"
+                f"batch axis {a!r} is not a mesh axis "
+                f"(mesh has {tuple(layout.mesh.axis_names)})"
+            )
+        if a in layout.worker_axes:
+            raise ValueError(
+                f"axis {a!r} cannot be both a worker axis and a batch axis"
             )
     n_dev = int(np.prod([layout.mesh.shape[a] for a in layout.worker_axes]))
     if cfg.num_workers % n_dev:
@@ -71,9 +89,28 @@ def _validate(cfg: SlowMoConfig, layout: WorkerLayout) -> int:
     return n_dev
 
 
+def _validate_batches(layout: WorkerLayout, batches: PyTree) -> None:
+    """Eager check that every (tau, W, B, ...) batch leaf's B dim splits
+    over the layout's batch axes — a clear message instead of the sharding
+    error jit would raise deep inside shard_map."""
+    shard = layout.batch_shard
+    if shard == 1:
+        return
+    for leaf in jax.tree.leaves(batches):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 3 and shape[2] % shard:
+            raise ValueError(
+                f"per-worker batch {shape[2]} (batch leaf {shape}) must be "
+                f"divisible by the {shard}-way batch axes "
+                f"{layout.batch_axes} of the hierarchical layout"
+            )
+
+
 def mesh_backend(cfg: SlowMoConfig, layout: WorkerLayout) -> comm.MeshBackend:
     n_dev = _validate(cfg, layout)
-    return comm.MeshBackend(layout.worker_axes, cfg.num_workers, n_dev)
+    return comm.MeshBackend(
+        layout.worker_axes, cfg.num_workers, n_dev, batch_axes=layout.batch_axes
+    )
 
 
 def build_spmd_round(
@@ -102,6 +139,7 @@ def build_spmd_round(
     touch a state object after passing it in.
     """
     backend = mesh_backend(cfg, layout)
+    _validate_batches(layout, batches)
     body = slowmo.make_slowmo_round(cfg, loss_fn, backend, pack=pack)
     state_specs = sharding.spmd_state_specs(
         layout, state, exact_average=cfg.exact_average
@@ -137,6 +175,11 @@ def make_spmd_slowmo_round(
     cache: dict = {}
 
     def round_fn(state, batches, lr):
+        # re-check every call, not just on cache miss: the cache is keyed on
+        # pytree STRUCTURE, so a later call with the same structure but a
+        # ragged batch shape would otherwise skip the eager check and die
+        # deep inside shard_map instead.
+        _validate_batches(layout, batches)
         key = (jax.tree.structure(state), jax.tree.structure(batches))
         if key not in cache:
             cache[key] = build_spmd_round(cfg, loss_fn, layout, state, batches, pack)

@@ -8,9 +8,14 @@ import so both meshes can be built on the CPU-only container.
 Worker layouts (see DESIGN.md §2):
 * ``flat``        — paper-faithful: one SlowMo worker per data-axis row
                     (m=16 single-pod, m=32 multi-pod).
-* ``hierarchical``— beyond-paper: one worker per pod (m=2; multi-pod only);
-                    within-pod DP gradients sync every step over fast ICI,
-                    SlowMo handles only the cross-pod (slow) links.
+* ``hierarchical``— the paper's ACTUAL experimental regime (each node an
+                    AllReduce DP group, SlowMo across nodes — the BMUF block
+                    structure): one worker per pod; within-pod DP gradients
+                    sync every step over fast ICI (the layout's
+                    ``batch_axes``), SlowMo handles only the cross-pod
+                    (slow) links.  Runs both on the GSPMD dry-run path and
+                    through the shard_map execution path
+                    (``repro.distributed.spmd``).
 """
 from __future__ import annotations
 
@@ -57,6 +62,27 @@ def make_spmd_layout(num_workers: int) -> WorkerLayout:
     return WorkerLayout(mesh, worker_axes=("data",), batch_axes=(), model_axes=())
 
 
+def make_hierarchical_layout(pods: int, data: int) -> WorkerLayout:
+    """Hierarchical (pod, data) WorkerLayout for the shard_map path.
+
+    ``pods`` SlowMo workers, each an AllReduce DP group of ``data`` devices:
+    the first ``pods * data`` devices form a 2-D mesh, SlowMo state and the
+    slow-momentum collectives live on ``pod``, each worker's batch is
+    sharded (and its gradients synced every inner step) over ``data``.  On a
+    CPU-only host set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before the first jax import.
+    """
+    n = pods * data
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"need {n} devices for a ({pods} pods x {data} data) mesh, "
+            f"have {len(devs)}"
+        )
+    mesh = Mesh(np.asarray(devs[:n]).reshape(pods, data), ("pod", "data"))
+    return make_layout(mesh, "hierarchical", spmd=True)
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkerLayout:
     """How SlowMo workers map onto mesh axes."""
@@ -74,24 +100,64 @@ class WorkerLayout:
     def batch_shard(self) -> int:
         return int(np.prod([self.mesh.shape[a] for a in self.batch_axes])) or 1
 
+    def effective_batch(self, per_worker_batch: int) -> int:
+        """Global samples consumed per inner step.
+
+        Hierarchical and flat layouts over the same mesh agree whenever the
+        flat per-worker batch times the batch_shard equals the hierarchical
+        per-worker batch — a pod IS one bigger-batch worker."""
+        return max(self.num_workers, 1) * per_worker_batch
+
     @property
     def data_axes(self) -> tuple[str, ...]:
         """All non-model axes (used by serve-path batch sharding)."""
         return tuple(a for a in self.mesh.axis_names if a not in self.model_axes)
 
 
-def make_layout(mesh: Mesh, style: str = "flat") -> WorkerLayout:
+def validate_spmd_model_axes(layout: WorkerLayout) -> None:
+    """THE model-axis rule of the shard_map path, shared by
+    ``make_layout(spmd=True)`` and ``repro.distributed.spmd._validate``:
+    until model parallelism composes with the mapped round (ROADMAP), every
+    model axis present in the mesh must have size 1."""
+    for a in layout.model_axes:
+        if a in layout.mesh.axis_names and layout.mesh.shape[a] != 1:
+            raise ValueError(
+                "spmd path does not yet compose with model parallelism: "
+                f"model axis {a!r} has size {layout.mesh.shape[a]} (need 1)"
+            )
+
+
+def make_layout(mesh: Mesh, style: str = "flat", *, spmd: bool = False) -> WorkerLayout:
+    """Map a mesh to a WorkerLayout; errors are raised EAGERLY with the
+    offending axis named, not at lowering time.
+
+    ``spmd=True`` additionally validates the layout for the shard_map
+    execution path (``repro.distributed.spmd``), which does not yet compose
+    with model parallelism: every model axis present must have size 1.
+    """
     axes = mesh.axis_names
     if style == "flat":
-        wax = tuple(a for a in axes if a != "model")
-        return WorkerLayout(mesh, worker_axes=wax, batch_axes=())
-    if style == "hierarchical":
+        layout = WorkerLayout(
+            mesh, worker_axes=tuple(a for a in axes if a != "model"), batch_axes=()
+        )
+    elif style == "hierarchical":
         if "pod" not in axes:
-            raise ValueError("hierarchical layout needs a 'pod' axis")
-        return WorkerLayout(mesh, worker_axes=("pod",), batch_axes=("data",))
-    if style == "single":
+            raise ValueError(
+                f"hierarchical layout needs a 'pod' axis; mesh has {tuple(axes)}"
+            )
+        if "data" not in axes:
+            raise ValueError(
+                "hierarchical layout needs a 'data' axis for the within-pod "
+                f"batch shards; mesh has {tuple(axes)}"
+            )
+        layout = WorkerLayout(mesh, worker_axes=("pod",), batch_axes=("data",))
+    elif style == "single":
         # all devices serve one worker (AR baseline / Lookahead)
-        return WorkerLayout(
+        layout = WorkerLayout(
             mesh, worker_axes=(), batch_axes=tuple(a for a in axes if a != "model")
         )
-    raise ValueError(f"unknown layout style {style!r}")
+    else:
+        raise ValueError(f"unknown layout style {style!r}")
+    if spmd:
+        validate_spmd_model_axes(layout)
+    return layout

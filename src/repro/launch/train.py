@@ -46,11 +46,41 @@ def main():
         "--mesh",
         default="none",
         choices=("none", "host"),
-        help="'host': lower rounds with shard_map over a 1-D device mesh, one "
-        "worker per device (CPU: export XLA_FLAGS=--xla_force_host_platform_"
-        "device_count=<workers> first); 'none': array-axis oracle",
+        help="'host': lower rounds with shard_map over a device mesh (CPU: "
+        "export XLA_FLAGS=--xla_force_host_platform_device_count=<devices> "
+        "first); 'none': array-axis oracle",
     )
+    ap.add_argument(
+        "--layout",
+        default="flat",
+        choices=("flat", "hierarchical"),
+        help="how --mesh host maps workers to devices: 'flat' = one worker "
+        "per device (--workers devices); 'hierarchical' = one worker per pod "
+        "of --pods x --dp devices, gradients all-reduced over the pod's --dp "
+        "data shards every inner step",
+    )
+    ap.add_argument("--pods", type=int, default=2, help="hierarchical: worker (pod) count")
+    ap.add_argument("--dp", type=int, default=2, help="hierarchical: data shards per pod")
     args = ap.parse_args()
+
+    layout = None
+    if args.mesh == "host":
+        if args.layout == "hierarchical":
+            from .mesh import make_hierarchical_layout
+
+            layout = make_hierarchical_layout(args.pods, args.dp)
+            if args.workers != layout.num_workers:
+                print(
+                    f"hierarchical layout: num_workers := {layout.num_workers} "
+                    f"pods (ignoring --workers {args.workers}); each worker's "
+                    f"batch splits over {args.dp} devices"
+                )
+                args.workers = layout.num_workers
+        else:
+            from .mesh import make_spmd_layout
+
+            layout = make_spmd_layout(args.workers)
+        print(f"mesh path ({args.layout}): {args.workers} workers over {layout.mesh}")
 
     cfg = get_config(args.arch, reduced=not args.full)
     model = build_model(cfg)
@@ -76,12 +106,6 @@ def main():
         lr=args.lr, log_every=max(args.rounds // 10, 1),
         ckpt_every=10 if args.ckpt else 0, ckpt_path=args.ckpt,
     )
-    layout = None
-    if args.mesh == "host":
-        from .mesh import make_spmd_layout
-
-        layout = make_spmd_layout(args.workers)
-        print(f"mesh path: {args.workers} workers over {layout.mesh}")
     trainer = Trainer(model, smcfg, tc, sampler, layout=layout)
 
     state = None

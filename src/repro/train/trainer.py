@@ -86,7 +86,19 @@ class Trainer:
             self.pack = slowmo.make_state_pack_spec(smcfg, pshapes)
         if layout is not None:
             # mesh-lowered path: worker axis sharded over the layout's mesh,
-            # collectives lower to all-reduce / collective-permute.
+            # collectives lower to all-reduce / collective-permute.  On a
+            # hierarchical layout each worker's per-round batch additionally
+            # splits over the batch (data) axes — the sampler still produces
+            # (tau, W, per_worker_batch, ...) arrays and shard_map carves the
+            # per-device shards, so per_worker_batch must divide evenly.
+            shard = getattr(layout, "batch_shard", 1)
+            if shard > 1 and tc.per_worker_batch % shard:
+                raise ValueError(
+                    f"per_worker_batch={tc.per_worker_batch} must be divisible "
+                    f"by the {shard}-way batch axes {layout.batch_axes} of the "
+                    "hierarchical layout (each worker's batch is split across "
+                    "its pod's devices)"
+                )
             from ..distributed import spmd
 
             self.round_fn = spmd.make_spmd_slowmo_round(

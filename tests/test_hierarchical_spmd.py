@@ -1,0 +1,196 @@
+"""Hierarchical (pod, data) SlowMo under shard_map: equivalence + HLO pins.
+
+Runs in a SUBPROCESS with 8 placeholder host-CPU devices (conftest must not
+pollute the main process's device count).  Pins the acceptance criteria of
+the hierarchical execution path on a (pods=2, data=2) mesh:
+
+* TWO-LEVEL EQUIVALENCE ORACLE — a hierarchical mesh round must match a flat
+  2-worker ``AxisBackend`` run whose per-worker batch is the concatenation of
+  the pod's data-shard batches (within-pod AllReduce == one bigger-batch
+  worker), to 1e-6 (relative to leaf scale: fp non-associativity of the
+  two-level mean makes bitwise equality impossible, and e.g. ``slow_u`` is
+  amplified by 1/gamma) over 3 rounds, across bases {local, ar, sgp},
+  packed x tree layouts, and bf16 ``average_dtype`` (which IS bit-identical:
+  both backends round through the same bf16 lattice);
+
+* TWO-LEVEL HLO STRUCTURE — on the packed layout, per inner step exactly one
+  gradient all-reduce whose replica groups span only the ``data`` axis, and
+  per round boundary exactly one packed all-reduce whose groups span only
+  ``pod``; gossip collective-permutes connect same-data-index devices across
+  pods only.  Asserted on parsed replica groups / source-target pairs
+  (``hlo_analysis.collective_ops``), not op counts alone;
+
+* SPEC UNIFICATION — the GSPMD dry-run path (``sharding.batch_shardings``)
+  and the shard_map path (``sharding.spmd_batch_specs``) produce the same
+  batch PartitionSpecs (they used to disagree: dry-run sharded B over
+  ``data``, the mesh path replicated it).
+"""
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import slowmo, packing
+from repro.distributed import spmd, sharding, hlo_analysis
+from repro.launch.mesh import make_hierarchical_layout, make_spmd_layout
+
+assert len(jax.devices()) == 8
+PODS, DP, B, D = 2, 2, 4, 16
+W = PODS  # hierarchical workers = pods; each worker's batch B splits over DP
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+def make_batches(seed, tau):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (tau, W, B, D))
+    return {"x": x, "y": jnp.sum(x, -1) * 0.1}
+
+layout = make_hierarchical_layout(PODS, DP)
+assert layout.num_workers == PODS and layout.batch_shard == DP
+
+# --- two-level equivalence oracle -----------------------------------------
+# The SAME (tau, W, B, ...) batch arrays feed both runs: the flat oracle
+# worker consumes its whole B, the hierarchical mesh shards B over 'data' —
+# so each pod's data-shard batches concatenate to the oracle worker's batch.
+CASES = [
+    ("local_sgd+slowmo", False, None),
+    ("local_sgd+slowmo", True, None),
+    ("local_sgd+slowmo", True, "bf16"),
+    ("ar_sgd", False, None),
+    ("ar_sgd", True, None),
+    ("sgp+slowmo", False, None),
+    ("sgp+slowmo", True, None),
+    ("sgp+slowmo", True, "bf16"),
+]
+for name, packed, avg in CASES:
+    cfg = dataclasses.replace(
+        slowmo.preset(name, num_workers=W, tau=3),
+        packed=packed,
+        average_dtype=jnp.bfloat16 if avg == "bf16" else None,
+    )
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (D,)), "b": jnp.zeros(())}
+    pack = slowmo.make_state_pack_spec(cfg, params0) if packed else None
+    state_a = slowmo.init_slowmo(cfg, params0, pack=pack)
+    state_m = jax.tree.map(jnp.array, state_a)  # real copy: fn_m donates its state
+    fn_a = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn, pack=pack))
+    fn_m = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack)
+    for r in range(3):
+        b = make_batches(r, cfg.tau)
+        state_a, met_a = fn_a(state_a, b, 0.1)
+        state_m, met_m = fn_m(state_m, b, 0.1)
+    flat_a, _ = jax.tree_util.tree_flatten_with_path(state_a)
+    flat_m = jax.tree.leaves(state_m)
+    assert len(flat_a) == len(flat_m)
+    for (path, a), m in zip(flat_a, flat_m):
+        a, m = np.asarray(a, np.float32), np.asarray(m, np.float32)
+        scale = max(1.0, float(np.max(np.abs(m))) if m.size else 1.0)
+        np.testing.assert_allclose(
+            a / scale, m / scale, atol=1e-6, rtol=0,
+            err_msg=f"{name} packed={packed} avg={avg}: {jax.tree_util.keystr(path)}")
+    assert abs(float(met_a["loss"]) - float(met_m["loss"])) < 1e-5, (name, packed, avg)
+    print("HIER-EQ-OK", name, f"packed={int(packed)}", f"avg={avg or 'f32'}")
+
+# --- two-level collective structure (replica groups, packed layout) --------
+DATA_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(layout.mesh, ("data",)))
+POD_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(layout.mesh, ("pod",)))
+ALL_G = hlo_analysis.normalize_groups(
+    hlo_analysis.mesh_axis_groups(layout.mesh, ("pod", "data")))
+
+def lowered_ops(name, tau):
+    cfg = dataclasses.replace(
+        slowmo.preset(name, num_workers=W, tau=tau), packed=True, unroll_inner=True)
+    params0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (D,)), "b": jnp.zeros(())}
+    pack = slowmo.make_state_pack_spec(cfg, params0)
+    state = slowmo.init_slowmo(cfg, params0, pack=pack)
+    b = make_batches(0, tau)
+    fn = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack).build(state, b)
+    txt = hlo_analysis.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
+    buf_bytes = pack.rows("float32") * packing.LANES * 4
+    return hlo_analysis.collective_ops(txt), buf_bytes
+
+TAU = 2
+ops, buf_bytes = lowered_ops("local_sgd+slowmo", TAU)
+ars = [o for o in ops if o["op"] == "all-reduce"]
+by_groups = {}
+for o in ars:
+    g = o["replica_groups"]
+    # () is XLA's replica_groups={} form: all devices in one group
+    key = hlo_analysis.normalize_groups(g) if g else ALL_G
+    by_groups.setdefault(key, []).append(o)
+# per inner step exactly ONE gradient all-reduce grouped over 'data' only,
+# each moving the whole packed gradient buffer
+data_ars = by_groups.get(DATA_G, [])
+assert len(data_ars) == TAU, (len(data_ars), TAU)
+assert all(o["bytes"] == buf_bytes for o in data_ars), data_ars
+# per round boundary exactly ONE packed all-reduce grouped over 'pod' only
+pod_ars = by_groups.get(POD_G, [])
+assert len(pod_ars) == 1, pod_ars
+assert pod_ars[0]["bytes"] == buf_bytes, pod_ars
+# everything else is the scalar loss pmean over ALL devices — no collective
+# may span any other device grouping
+other = {g: o for g, o in by_groups.items() if g not in (DATA_G, POD_G)}
+assert set(other) == {ALL_G}, list(other)
+assert all(o["bytes"] == 4 for o in other[ALL_G]), other[ALL_G]
+print("HIER-HLO-OK all-reduce groups: "
+      f"data x{len(data_ars)}, pod x{len(pod_ars)}, scalar x{len(other[ALL_G])}")
+
+# gossip rolls stay pod-level: every collective-permute pair connects
+# same-data-index devices in different pods
+ops_sgp, _ = lowered_ops("sgp+slowmo", TAU)
+cps = [o for o in ops_sgp if o["op"] == "collective-permute"]
+assert cps, "sgp round lowered without collective-permutes"
+ids = np.vectorize(lambda d: d.id)(layout.mesh.devices)
+pod_pairs = {(int(ids[p, d]), int(ids[(p + 1) % PODS, d]))
+             for p in range(PODS) for d in range(DP)}
+for o in cps:
+    assert o["source_target_pairs"] is not None, o
+    assert set(o["source_target_pairs"]) <= pod_pairs, (o, pod_pairs)
+print("HIER-CP-OK", len(cps), "collective-permutes, all pod-level")
+
+# --- one spec rule for both paths (dry-run GSPMD vs shard_map) -------------
+for lay in (layout, make_spmd_layout(8)):
+    shapes = {"x": jax.ShapeDtypeStruct((3, lay.num_workers, B, D), jnp.float32),
+              "y": jax.ShapeDtypeStruct((3, lay.num_workers, B), jnp.float32)}
+    gspmd = sharding.batch_shardings(lay, shapes)
+    mapped = sharding.spmd_batch_specs(lay, shapes)
+    for k in shapes:
+        assert gspmd[k].spec == mapped[k], (k, gspmd[k].spec, mapped[k])
+hier = sharding.spmd_batch_specs(layout, {"x": jnp.zeros((3, W, B, D))})
+assert hier["x"] == P(None, "pod", "data"), hier
+print("SPEC-UNIFY-OK")
+print("ALL-OK")
+"""
+
+
+def test_hierarchical_matches_flat_oracle_and_hlo_pins():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        # JAX_PLATFORMS=cpu: without it the stripped env lets the bundled
+        # libtpu probe the GCP metadata server for ~8 min per subprocess
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout
+    assert proc.stdout.count("HIER-EQ-OK") == 8
+    assert "HIER-HLO-OK" in proc.stdout
+    assert "HIER-CP-OK" in proc.stdout
+    assert "SPEC-UNIFY-OK" in proc.stdout

@@ -1,0 +1,134 @@
+"""Property-style tests for WorkerLayout bookkeeping and layout validation.
+
+Runs via the ``tests/_hyp.py`` shim: with hypothesis installed these are real
+property tests over random (pod, data) factorizations; without it they
+collect and skip cleanly.  Layout bookkeeping is pure arithmetic over
+``mesh.axis_names`` / ``mesh.shape``, so a duck-typed stand-in mesh keeps
+these tests off the (single-device) test process's real jax device state —
+the actual device meshes are exercised by the subprocess tests
+(test_spmd / test_hierarchical_spmd).
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core.slowmo import SlowMoConfig
+from repro.distributed import spmd
+from repro.launch.mesh import WorkerLayout, make_layout
+
+
+class FakeMesh:
+    """Duck-typed mesh: just ``axis_names`` + ``shape``, no devices."""
+
+    def __init__(self, axes, sizes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(zip(axes, sizes))
+
+
+def hier_mesh(pods, data, model=1):
+    return FakeMesh(("pod", "data", "model"), (pods, data, model))
+
+
+class TestLayoutBookkeeping:
+    @given(
+        pods=st.integers(min_value=1, max_value=16),
+        data=st.integers(min_value=1, max_value=16),
+        per_worker_batch=st.integers(min_value=1, max_value=64),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_hierarchical_factorization(self, pods, data, per_worker_batch):
+        """Hierarchical (pod, data): workers = pods, each worker's batch
+        shards over data, and a pod consumes pods*B samples per step."""
+        lay = make_layout(hier_mesh(pods, data), "hierarchical")
+        assert lay.worker_axes == ("pod",)
+        assert lay.batch_axes == ("data",)
+        assert lay.num_workers == pods
+        assert lay.batch_shard == data
+        assert lay.effective_batch(per_worker_batch) == pods * per_worker_batch
+
+    @given(
+        pods=st.integers(min_value=1, max_value=16),
+        data=st.integers(min_value=1, max_value=16),
+        shard_batch=st.integers(min_value=1, max_value=64),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_hierarchical_flat_same_global_batch(self, pods, data, shard_batch):
+        """A hierarchical worker whose batch is the concatenation of its
+        pod's data shards consumes exactly the flat layout's global batch —
+        the invariant behind the equivalence oracle."""
+        mesh = hier_mesh(pods, data)
+        hier = make_layout(mesh, "hierarchical")
+        flat = make_layout(mesh, "flat")
+        assert flat.num_workers == pods * data
+        assert hier.effective_batch(shard_batch * data) == flat.effective_batch(
+            shard_batch
+        )
+
+    @given(
+        pods=st.integers(min_value=1, max_value=8),
+        data=st.integers(min_value=1, max_value=8),
+        extra=st.integers(min_value=0, max_value=63),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_batch_validation_rejects_nondivisible(self, pods, data, extra):
+        layout = make_layout(hier_mesh(pods, data), "hierarchical")
+        B = data + extra
+        batches = {"x": np.zeros((2, pods, B, 4), np.float32)}
+        if B % data == 0:
+            spmd._validate_batches(layout, batches)  # must not raise
+        else:
+            with pytest.raises(ValueError, match="divisible"):
+                spmd._validate_batches(layout, batches)
+
+
+class TestMakeLayoutValidation:
+    def test_missing_pod_axis(self):
+        with pytest.raises(ValueError, match="'pod' axis"):
+            make_layout(FakeMesh(("data", "model"), (4, 1)), "hierarchical")
+
+    def test_missing_data_axis(self):
+        with pytest.raises(ValueError, match="'data' axis"):
+            make_layout(FakeMesh(("pod", "model"), (4, 1)), "hierarchical")
+
+    def test_spmd_rejects_model_parallel(self):
+        with pytest.raises(ValueError, match="model axis 'model' has size 4"):
+            make_layout(hier_mesh(2, 2, model=4), "hierarchical", spmd=True)
+
+    def test_spmd_allows_size_one_model_axis(self):
+        lay = make_layout(hier_mesh(2, 2, model=1), "hierarchical", spmd=True)
+        assert lay.num_workers == 2
+
+    def test_unknown_style(self):
+        with pytest.raises(ValueError, match="unknown layout style"):
+            make_layout(hier_mesh(2, 2), "pyramid")
+
+
+class TestSpmdValidate:
+    def cfg(self, workers=2, base="local"):
+        return SlowMoConfig(num_workers=workers, tau=2, base=base)
+
+    def test_batch_axis_overlapping_worker_axis(self):
+        lay = WorkerLayout(
+            hier_mesh(2, 2), worker_axes=("pod",), batch_axes=("pod",),
+            model_axes=(),
+        )
+        with pytest.raises(ValueError, match="both a worker axis and a batch axis"):
+            spmd._validate(self.cfg(), lay)
+
+    def test_batch_axis_not_in_mesh(self):
+        lay = WorkerLayout(
+            FakeMesh(("pod",), (2,)), worker_axes=("pod",), batch_axes=("data",),
+            model_axes=(),
+        )
+        with pytest.raises(ValueError, match="not a mesh axis"):
+            spmd._validate(self.cfg(), lay)
+
+    def test_hierarchical_gossip_needs_one_worker_per_pod_device(self):
+        lay = make_layout(hier_mesh(2, 2), "hierarchical")
+        with pytest.raises(ValueError, match="one worker per device"):
+            spmd._validate(self.cfg(workers=4, base="sgp"), lay)
+
+    def test_hierarchical_layout_passes(self):
+        lay = make_layout(hier_mesh(2, 2), "hierarchical")
+        assert spmd._validate(self.cfg(), lay) == 2

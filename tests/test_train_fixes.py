@@ -164,3 +164,32 @@ class TestCheckpointResume:
             params={"w": jnp.zeros((W, D + 1), jnp.float32)})
         with pytest.raises(ValueError, match="leaf"):
             ckpt_lib.restore(path, like=bad)
+
+
+class TestHierarchicalBatchSplit:
+    """Trainer-side bookkeeping for hierarchical layouts: each worker's
+    per-round batch splits over the layout's batch (data) axes, so the
+    per-worker batch must divide evenly — checked EAGERLY at Trainer
+    construction, not at first jit call."""
+
+    def hier_layout(self, pods=2, data=2):
+        from repro.launch.mesh import WorkerLayout
+
+        mesh = SimpleNamespace(
+            axis_names=("pod", "data"), shape={"pod": pods, "data": data}
+        )
+        return WorkerLayout(
+            mesh, worker_axes=("pod",), batch_axes=("data",), model_axes=()
+        )
+
+    def test_nondivisible_per_worker_batch_rejected(self):
+        smcfg = slowmo.preset("local_sgd", num_workers=2, tau=2)
+        tc = TrainConfig(total_rounds=1, per_worker_batch=3, seq_len=D, log_every=0)
+        with pytest.raises(ValueError, match="divisible"):
+            Trainer(dummy_model(), smcfg, tc, dummy_sampler, layout=self.hier_layout())
+
+    def test_divisible_per_worker_batch_accepted(self):
+        smcfg = slowmo.preset("local_sgd", num_workers=2, tau=2)
+        tc = TrainConfig(total_rounds=1, per_worker_batch=4, seq_len=D, log_every=0)
+        t = Trainer(dummy_model(), smcfg, tc, dummy_sampler, layout=self.hier_layout())
+        assert t.layout.effective_batch(tc.per_worker_batch) == 8
