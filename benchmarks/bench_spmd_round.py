@@ -35,6 +35,13 @@ and traffic trade is recorded per preset in the JSON (``layout`` field +
 ``hierarchical_vs_flat`` summary).  Host-CPU numbers rank topologies only;
 real ICI makes the within-pod hop much cheaper than the cross-pod one.
 
+``--tp N`` adds the full (pod, data, model) topology: workers become
+tensor-parallel groups of N devices, the deep MLP runs column-parallel-in /
+row-parallel-out with psum over ``model`` (``repro.models.tp``), and every
+boundary/gossip collective moves only the local model shard — the
+``tp_vs_flat`` summary records the round-time ratio and the ~1/N
+boundary-byte shrink next to ``hierarchical_vs_flat``.
+
 Results go to BENCH_packed_round.json (``--out``).  ``--smoke`` runs one
 tiny round per backend/layout so CI can keep this harness from rotting.
 
@@ -88,6 +95,53 @@ def make_problem(W: int, tau: int, d: int = 256, B: int = 8, layers: int = 8):
     return loss_fn, params0, batches
 
 
+def make_tp_problem(W: int, tau: int, d: int = 256, B: int = 8, layers: int = 8):
+    """The deep MLP of ``make_problem``, tensor-parallel: per layer a
+    column-parallel ``w_in`` (sharded on its output dim), a row-parallel
+    ``w_down`` (sharded on its contracting dim, psum over ``model``), and a
+    replicated bias — the Megatron sandwich, via ``repro.models.tp``."""
+    from repro.models import tp as tp_lib
+
+    def factory(backend):
+        if d % backend.model_shards:
+            # the spec guard would silently REPLICATE w_in/w_down and the
+            # psum would then sum already-complete products — refuse to
+            # benchmark wrong math (mirrors make_tp_loss's eager check)
+            raise ValueError(
+                f"--dim {d} must be divisible by the {backend.model_shards}"
+                "-way model axes for the tp sweep"
+            )
+
+        def loss_fn(params, batch):
+            h = batch["x"]
+            for lyr in params["layers"]:
+                u = jnp.tanh(tp_lib.copy_to_tp(backend, h) @ lyr["w_in"])
+                h = tp_lib.reduce_from_tp(backend, u @ lyr["w_down"]) + lyr["b"]
+            return jnp.mean((h @ params["head"] - batch["y"]) ** 2)
+
+        return loss_fn
+
+    loss_fn = tp_lib.TPLoss(factory)
+    k = jax.random.PRNGKey(0)
+    params0 = {
+        "layers": [
+            {
+                "w_in": (0.3 / d**0.5) * jax.random.normal(jax.random.fold_in(k, 3 * i), (d, d)),
+                "w_down": (0.3 / d**0.5) * jax.random.normal(jax.random.fold_in(k, 3 * i + 1), (d, d)),
+                "b": jnp.zeros((d,)),
+            }
+            for i in range(layers)
+        ],
+        "head": 0.1 * jax.random.normal(jax.random.fold_in(k, 999), (d, 1)),
+    }
+    kb = jax.random.PRNGKey(1)
+    batches = {
+        "x": jax.random.normal(kb, (tau, W, B, d)),
+        "y": jnp.zeros((tau, W, B, 1)),
+    }
+    return loss_fn, params0, batches
+
+
 def time_fn(fn, state, batches, iters=20, warmup=3):
     """Median per-round wall-clock: robust to the contention spikes of the
     oversubscribed host-CPU device farm (mean was swung ~2x by them)."""
@@ -111,7 +165,9 @@ def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters
         packed=packed,
         average_dtype=jnp.bfloat16 if avg_dtype == "bf16" else None,
     )
-    pack = slowmo.make_state_pack_spec(cfg, params0) if packed else None
+    # on TP layouts this is the shard-major ShardedPackSpec (global
+    # semantics, so the axis-oracle run packs/unpacks through it unchanged)
+    pack = slowmo.make_state_pack_spec(cfg, params0, layout=layout) if packed else None
     # the mesh round DONATES its state, whose leaves may alias params0's
     # buffers (broadcast/astype views) — give every case its own copy.
     params0 = jax.tree.map(jnp.array, params0)
@@ -176,6 +232,15 @@ def main():
     ap.add_argument("--pods", type=int, default=0, help="hierarchical pod count (0 = workers // dp)")
     ap.add_argument("--dp", type=int, default=2, help="hierarchical data shards per pod")
     ap.add_argument(
+        "--tp",
+        type=int,
+        default=1,
+        help="add a (pod, data, model) sweep: workers become --tp-way "
+        "tensor-parallel groups (Megatron MLP, psum over 'model'); records "
+        "a tp_vs_flat summary (round-time ratio + the ~1/tp boundary-byte "
+        "shrink) alongside hierarchical_vs_flat",
+    )
+    ap.add_argument(
         "--smoke",
         action="store_true",
         help="CI guard: one tiny round, both backends, packed + per-leaf",
@@ -213,6 +278,22 @@ def main():
         sweeps.append(
             ("hierarchical", make_hierarchical_layout(pods, args.dp),
              make_problem(pods, args.tau, args.dim, B * args.dp, args.layers))
+        )
+    if args.tp > 1:
+        # full (pod, data, model) topology on the SAME device count and
+        # global batch: pods shrink by dp*tp, so the per-worker batch scales
+        # by dp*tp (model replicas of a (pod, data) cell SHARE the cell's
+        # batch — per-(data)-device samples are B*tp, each device computing
+        # 1/tp of the model)
+        if W % (args.dp * args.tp):
+            raise SystemExit(
+                f"--workers {W} must factor into --dp x --tp x pods "
+                f"({args.dp} x {args.tp} x ?) for the tp sweep"
+            )
+        pods_tp = W // (args.dp * args.tp)
+        sweeps.append(
+            ("tp", make_hierarchical_layout(pods_tp, args.dp, args.tp),
+             make_tp_problem(pods_tp, args.tau, args.dim, B * args.dp * args.tp, args.layers))
         )
 
     presets = ("local_sgd+slowmo",) if args.smoke else (
@@ -283,21 +364,56 @@ def main():
                     else ""
                 )
             )
-    for preset in presets:
-        fl, hi = find(preset, True, "f32"), find(preset, True, "f32", "hierarchical")
-        if fl and hi:
-            summary.setdefault("hierarchical_vs_flat", {})[preset] = {
-                "mesh_round_ratio": hi["mesh_ms"] / fl["mesh_ms"],
-                "big_all_reduce_bytes_ratio": (
-                    hi["big_all_reduce_bytes"] / fl["big_all_reduce_bytes"]
-                    if fl["big_all_reduce_bytes"]
-                    else None
-                ),
-            }
-            print(
-                f"{preset}: hierarchical/flat packed mesh round "
-                f"x{summary['hierarchical_vs_flat'][preset]['mesh_round_ratio']:.2f}"
+    for layout_name, summary_key in (("hierarchical", "hierarchical_vs_flat"),
+                                     ("tp", "tp_vs_flat")):
+        for preset in presets:
+            fl, other = find(preset, True, "f32"), find(preset, True, "f32", layout_name)
+            if fl and other:
+                summary.setdefault(summary_key, {})[preset] = {
+                    "mesh_round_ratio": other["mesh_ms"] / fl["mesh_ms"],
+                    "big_all_reduce_bytes_ratio": (
+                        other["big_all_reduce_bytes"] / fl["big_all_reduce_bytes"]
+                        if fl["big_all_reduce_bytes"]
+                        else None
+                    ),
+                }
+                print(
+                    f"{preset}: {layout_name}/flat packed mesh round "
+                    f"x{summary[summary_key][preset]['mesh_round_ratio']:.2f}"
+                )
+
+    # loss_fn-boundary amortization (PR 4): on hierarchical layouts the
+    # communication-free 'local' base now CACHES the unpacked param tree
+    # across the inner loop (packing only the gradients around the per-step
+    # data sync) instead of re-unpacking at every loss_fn boundary — measure
+    # the delta against the legacy fully-packed inner loop.
+    for layout_name, layout, (loss_fn, params0, batches) in sweeps:
+        if layout.batch_shard == 1:
+            continue
+        cfg = dataclasses.replace(
+            slowmo.preset("local_sgd+slowmo", num_workers=layout.num_workers,
+                          tau=batches["x"].shape[0]),
+            packed=True,
+        )
+        pk = slowmo.make_state_pack_spec(cfg, params0, layout=layout)
+        times = {}
+        for mode, tree_inner in (("tree_carry", None), ("fully_packed", False)):
+            state = slowmo.init_slowmo(cfg, jax.tree.map(jnp.array, params0), pack=pk)
+            fn = spmd.make_spmd_slowmo_round(
+                cfg, loss_fn, layout, pack=pk, local_tree_inner=tree_inner
             )
+            times[mode] = time_fn(fn, state, batches, args.iters,
+                                  warmup=min(3, args.iters)) * 1e3
+        summary.setdefault("local_inner_amortization", {})[layout_name] = {
+            "tree_carry_ms": times["tree_carry"],
+            "fully_packed_ms": times["fully_packed"],
+            "speedup": times["fully_packed"] / times["tree_carry"],
+        }
+        print(
+            f"local@{layout_name}: tree-carry inner {times['tree_carry']:.2f} ms "
+            f"vs fully-packed {times['fully_packed']:.2f} ms "
+            f"(x{times['fully_packed'] / times['tree_carry']:.2f})"
+        )
 
     with open(args.out, "w") as f:
         json.dump({"records": records, "summary": summary}, f, indent=2)

@@ -31,6 +31,25 @@ gossip rolls, outer momentum) stay on the worker (``pod``) axes only.  On
 the oracle (and on mesh layouts without batch axes) each worker already
 consumes its whole batch locally, so ``grad_mean`` is the identity.
 
+Tensor-parallel (pod, data, model) layouts grow that seam into a REDUCTION-
+HOOK PAIR: ``grad_mean`` stays the batch-axis gradient sync, and the model-
+axis hooks (``model_psum`` / ``model_pmax`` / ``model_index``) are where a
+Megatron-style loss deposits its partial activation reductions — column-
+parallel in, row-parallel out, ``psum`` over ``model`` (see
+``repro.models.tp``).  Model-axis reductions live INSIDE the loss (the
+forward/backward of the matmuls), so gradients leave the loss already
+model-complete and the rest of the round — grad_mean over ``data``, the
+boundary all-reduce over ``pod`` — is unchanged and operates on the local
+model shard of every leaf.  On the oracle (and on TP-free mesh layouts) the
+model hooks are the identity, which is what lets a TP-aware loss double as
+its own equivalence oracle.
+
+A loss that needs the model hooks cannot be a bare ``(params, batch)``
+callable — it must know the backend.  The ``bind_loss`` protocol closes the
+loop: any loss exposing ``bind_backend(backend)`` (e.g. ``models.tp.TPLoss``)
+is bound by ``make_inner_step`` to whichever backend the round runs on;
+plain callables pass through untouched.
+
 The primitives are also LAYOUT-agnostic: they tree-map over whatever leaves
 the state carries.  On the per-leaf tree layout that is one collective per
 parameter leaf; on the packed flat-buffer layout (``repro.core.packing``)
@@ -51,11 +70,22 @@ from . import topology
 PyTree = Any
 
 
+def bind_loss(loss_fn, backend):
+    """Bind a backend-aware loss (anything exposing ``bind_backend``) to the
+    backend the round executes on; plain ``(params, batch)`` callables pass
+    through unchanged.  This is how TP-aware losses (``repro.models.tp``)
+    reach the model-axis reduction hooks without widening the loss API."""
+    bind = getattr(loss_fn, "bind_backend", None)
+    return bind(backend) if bind is not None else loss_fn
+
+
 class AxisBackend:
     """Array-axis oracle: workers = leading axis 0 of every leaf."""
 
     kind = "axis"
     batch_axes: tuple[str, ...] = ()  # workers consume their batch whole
+    model_axes: tuple[str, ...] = ()  # no tensor parallelism on the oracle
+    model_shards: int = 1
 
     def __init__(self, num_workers: int):
         self.num_workers = num_workers
@@ -78,6 +108,22 @@ class AxisBackend:
     def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
         """Sum over workers of a per-shard scalar."""
         return x
+
+    # -- model-axis hooks (tensor parallelism; identity on the oracle) ------
+    def model_psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Sum of partial activations over the model shards — where a row-
+        parallel matmul (and the backward of a column-parallel one) deposits
+        its reduction.  The oracle holds full parameters, so partial sums
+        are already complete."""
+        return x
+
+    def model_pmax(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Max over model shards (vocab-parallel softmax stabilization)."""
+        return x
+
+    def model_index(self):
+        """This device's position along the model axes (vocab offsets)."""
+        return 0
 
     def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
         """Exact average over the worker axis; drops the leading axis.
@@ -129,6 +175,13 @@ class MeshBackend:
     average, gossip rolls, buffer averaging) stay on the worker axes only —
     the per-worker state is REPLICATED over the batch axes and every batch-
     axis replica computes the identical update once gradients are synced.
+
+    ``model_axes`` (tensor-parallel layouts) are the mesh axes every
+    parameter leaf is model-sharded over: the ``model_psum`` / ``model_pmax``
+    hooks execute the loss's Megatron-style activation reductions over them,
+    and NOTHING ELSE reduces over model — state collectives operate on the
+    local model shard (which is what shrinks boundary traffic by 1/TP), and
+    scalar losses are already model-replicated after the loss's own psum.
     """
 
     kind = "mesh"
@@ -139,6 +192,8 @@ class MeshBackend:
         num_workers: int,
         num_devices: int,
         batch_axes: tuple[str, ...] = (),
+        model_axes: tuple[str, ...] = (),
+        model_shards: int = 1,
     ):
         if num_workers % num_devices:
             raise ValueError(
@@ -149,6 +204,8 @@ class MeshBackend:
         self.num_workers = num_workers
         self.num_devices = num_devices
         self.batch_axes = tuple(batch_axes)
+        self.model_axes = tuple(model_axes)
+        self.model_shards = model_shards
         # jax collectives accept a single name or a tuple of names (the
         # flattened, row-major index over the named axes).
         self.axis_entry = (
@@ -157,6 +214,13 @@ class MeshBackend:
         self.batch_entry = (
             self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
         ) if self.batch_axes else None
+        self.model_entry = (
+            self.model_axes if len(self.model_axes) > 1 else self.model_axes[0]
+        ) if self.model_axes else None
+        # scalar reductions span worker + batch axes, NOT model: model-axis
+        # replicas hold identical scalars once the loss has psummed its
+        # activations, while e.g. AR gradient buffers DIFFER per model shard
+        # and must never be averaged across model.
         scalar_axes = self.axis_names + self.batch_axes
         self.scalar_entry = scalar_axes if len(scalar_axes) > 1 else scalar_axes[0]
 
@@ -181,7 +245,27 @@ class MeshBackend:
         return jax.tree.map(lambda g: jax.lax.pmean(g, self.batch_entry), tree)
 
     def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
-        return jax.lax.psum(x, self.axis_entry)
+        # worker AND model axes: per-shard scalars (e.g. the drift's sum of
+        # squares) are partial over BOTH the worker shards and the model
+        # shards of every leaf, so the global total needs both.
+        entry = self.axis_names + self.model_axes
+        return jax.lax.psum(x, entry if len(entry) > 1 else entry[0])
+
+    # -- model-axis hooks (tensor parallelism) ------------------------------
+    def model_psum(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.model_entry is None:
+            return x
+        return jax.lax.psum(x, self.model_entry)
+
+    def model_pmax(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.model_entry is None:
+            return x
+        return jax.lax.pmax(x, self.model_entry)
+
+    def model_index(self):
+        if self.model_entry is None:
+            return 0
+        return jax.lax.axis_index(self.model_entry)
 
     def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
         def avg(x):

@@ -39,6 +39,12 @@ class GossipState(NamedTuple):
 class GossipConfig:
     kind: str  # 'none' | 'sgp' | 'osgp' | 'dpsgd'
     num_workers: int
+    # dtype of the PERMUTED message (the wire transfer): SlowMoConfig wires
+    # average_dtype here, so gossip collectives honor it exactly like the
+    # boundary all-reduce — the rolled tree is cast before the roll (both
+    # backends round through the same lattice) and accumulation stays fp32.
+    # The (W,) push-sum weights stay fp32 — scalars, not traffic.
+    comm_dtype: Any = None
 
     def __post_init__(self):
         if self.kind not in ("none", "sgp", "osgp", "dpsgd"):
@@ -116,10 +122,21 @@ def mix(
     if cfg.kind == "none" or W == 1:
         return params, state
 
+    def wire(tree):
+        """Cast the outgoing message to the configured collective dtype —
+        that is what rides the ppermute; receivers upcast on arrival."""
+        if cfg.comm_dtype is None:
+            return tree
+        return jax.tree.map(lambda x: x.astype(cfg.comm_dtype), tree)
+
     if cfg.kind == "dpsgd":
         # Symmetric ring, doubly stochastic: x' = (x + x_prev + x_next) / 3.
         def ring(x):
-            return (x + backend.roll(x, 1) + backend.roll(x, -1)) / 3.0
+            xs = x if cfg.comm_dtype is None else x.astype(cfg.comm_dtype)
+            recv = backend.roll(xs, 1).astype(x.dtype) + backend.roll(
+                xs, -1
+            ).astype(x.dtype)
+            return (x + recv) / 3.0
 
         return jax.tree.map(ring, params), state
 
@@ -129,7 +146,7 @@ def mix(
         # Keep half, receive the half pushed by the peer `hop` behind.
         half = jax.tree.map(lambda x: 0.5 * x, params)
         half_w = 0.5 * state.w
-        rolled, rolled_w = _switch_roll((half, half_w), hops, backend)(step)
+        rolled, rolled_w = _switch_roll((wire(half), half_w), hops, backend)(step)
         mixed = jax.tree.map(lambda a, b: a + b.astype(a.dtype), half, rolled)
         new_w = half_w + rolled_w
         return mixed, GossipState(w=new_w, stale=state.stale, stale_w=state.stale_w)
@@ -137,7 +154,7 @@ def mix(
     # osgp: mix in the *stale* message (sent by the peer one round ago).
     half = jax.tree.map(lambda x: (0.5 * x).astype(jnp.float32), params)
     half_w = 0.5 * state.w
-    rolled, rolled_w = _switch_roll((state.stale, state.stale_w), hops, backend)(step)
+    rolled, rolled_w = _switch_roll((wire(state.stale), state.stale_w), hops, backend)(step)
     mixed = jax.tree.map(
         lambda p, a, b: (a + b).astype(p.dtype), params, half, rolled
     )

@@ -239,6 +239,198 @@ def make_pack_spec(tree: PyTree) -> PackSpec:
     return PackSpec(treedef=treedef, slots=tuple(slots), group_rows=group_rows)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedPackSpec:
+    """Tensor-parallel packing: shard-major flat buffers over model shards.
+
+    The GLOBAL layout of every group buffer is ``num_shards`` consecutive row
+    blocks, block ``s`` holding shard ``s`` of every model-sharded leaf (its
+    slice along ``shard_dims``) plus a full copy of every replicated leaf.
+    Sharding the row dimension of that buffer over the mesh's model axes
+    therefore hands each device exactly its local model shard, laid out by
+    the plain per-shard ``PackSpec`` in ``.shard`` — which is what the mapped
+    round body (``repro.distributed.spmd``) uses for its pack/unpack
+    boundaries, its fused-Nesterov kernel launches (rows stay ROW_ALIGN-
+    aligned per shard) and its boundary all-reduce, whose bytes shrink by
+    1/num_shards relative to the unsharded packing.
+
+    This object speaks the same interface as ``PackSpec`` (pack / unpack /
+    zeros / scalars / rows / groups), but with GLOBAL semantics — ``pack``
+    takes the full parameter tree, ``unpack`` returns it — so ``init_slowmo``,
+    checkpoints and the trainer use it as a drop-in ``pack``.
+
+    Caveat: replicated leaves appear once per shard block, so reductions
+    taken directly over a global buffer (e.g. a global gradient norm) would
+    count them ``num_shards`` times; the mesh path rejects ``clip_norm`` /
+    ``track_drift`` under TP for exactly this reason.
+    """
+
+    shard: PackSpec  # layout of ONE model shard (the mapped body's spec)
+    shard_dims: tuple  # per-slot model-sharded dim index (None = replicated)
+    full_shapes: tuple  # per-slot FULL (unsharded) leaf shape
+    num_shards: int
+
+    @staticmethod
+    def _gather(x):
+        """Replicate a committed device-sharded array before host-side
+        slicing: XLA:CPU's eager/SPMD partitioner mis-assembles slice +
+        concatenate chains that cross the shard boundaries of a committed
+        input (observed on jax 0.4.37 forced-host devices), and these
+        global<->tree conversions only run at init/checkpoint/eval
+        boundaries — never in the mapped round body — so the gather is off
+        the hot path.  Tracers and uncommitted arrays pass through."""
+        if isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer):
+            sh = getattr(x, "sharding", None)
+            if isinstance(sh, jax.sharding.NamedSharding) and not sh.is_fully_replicated:
+                return jax.device_put(
+                    x,
+                    jax.sharding.NamedSharding(
+                        sh.mesh, jax.sharding.PartitionSpec()
+                    ),
+                )
+        return x
+
+    @property
+    def treedef(self):
+        return self.shard.treedef
+
+    @property
+    def groups(self) -> tuple[str, ...]:
+        return self.shard.groups
+
+    def rows(self, group: str) -> int:
+        return self.num_shards * self.shard.rows(group)
+
+    @property
+    def group_rows(self) -> tuple[tuple[str, int], ...]:
+        return tuple((g, self.num_shards * r) for g, r in self.shard.group_rows)
+
+    @property
+    def num_elements(self) -> int:
+        return self.num_shards * self.shard.num_elements
+
+    def _shard_tree(self, tree: PyTree, s: int) -> PyTree:
+        """Shard ``s`` of a full tree (leaves may carry extra leading axes)."""
+        leaves, td = jax.tree.flatten(tree)
+        if td != self.shard.treedef:
+            raise ValueError(
+                f"tree structure mismatch:\n got {td}\n want {self.shard.treedef}"
+            )
+        out = []
+        for leaf, dim, fshape in zip(leaves, self.shard_dims, self.full_shapes):
+            lead = leaf.ndim - len(fshape)
+            if tuple(leaf.shape[lead:]) != tuple(fshape):
+                raise ValueError(
+                    f"leaf shape {tuple(leaf.shape)} does not end in the "
+                    f"spec's full shape {tuple(fshape)}"
+                )
+            if dim is None:
+                out.append(leaf)
+            else:
+                k = fshape[dim] // self.num_shards
+                out.append(
+                    jax.lax.slice_in_dim(leaf, s * k, (s + 1) * k, axis=lead + dim)
+                )
+        return jax.tree.unflatten(self.shard.treedef, out)
+
+    def pack(self, tree: PyTree, dtype=None) -> Packed:
+        """Full tree -> global shard-major buffers ``lead + (S*rows, LANES)``."""
+        # gather committed sharded leaves ONCE, not once per shard block
+        tree = jax.tree.map(self._gather, tree)
+        blocks = [
+            self.shard.pack(self._shard_tree(tree, s), dtype=dtype)
+            for s in range(self.num_shards)
+        ]
+        some = next(iter(blocks[0].buffers.values()))
+        lead_ndim = some.ndim - 2
+        return Packed(
+            {
+                g: jnp.concatenate([b[g] for b in blocks], axis=lead_ndim)
+                for g in self.shard.groups
+            }
+        )
+
+    def unpack(self, packed: Packed, dtype=None) -> PyTree:
+        """Global shard-major buffers -> the full tree (concat over shards)."""
+        packed = Packed({g: self._gather(v) for g, v in packed.buffers.items()})
+        some = next(iter(packed.buffers.values()))
+        lead_ndim = some.ndim - 2
+        block_leaves = []
+        for s in range(self.num_shards):
+            blk = Packed(
+                {
+                    g: jax.lax.slice_in_dim(
+                        packed[g], s * r, (s + 1) * r, axis=lead_ndim
+                    )
+                    for g, r in self.shard.group_rows
+                }
+            )
+            block_leaves.append(jax.tree.leaves(self.shard.unpack(blk, dtype=dtype)))
+        leaves = []
+        for i, dim in enumerate(self.shard_dims):
+            if dim is None:
+                leaves.append(block_leaves[0][i])
+            else:
+                lead = block_leaves[0][i].ndim - len(self.full_shapes[i])
+                leaves.append(
+                    jnp.concatenate(
+                        [bl[i] for bl in block_leaves], axis=lead + dim
+                    )
+                )
+        return jax.tree.unflatten(self.shard.treedef, leaves)
+
+    def zeros(self, lead: tuple[int, ...] = (), dtype=None) -> Packed:
+        return Packed(
+            {
+                g: jnp.zeros(
+                    tuple(lead) + (self.num_shards * rows, LANES),
+                    dtype or jnp.dtype(g),
+                )
+                for g, rows in self.shard.group_rows
+            }
+        )
+
+    def scalars(self, dtype=jnp.float32) -> Packed:
+        return self.shard.scalars(dtype)
+
+
+def make_sharded_pack_spec(tree: PyTree, shard_dims: PyTree, num_shards: int) -> ShardedPackSpec:
+    """Build the shard-major packing index for ``tree`` split ``num_shards``
+    ways.  ``shard_dims`` mirrors ``tree`` with, per leaf, the index of its
+    model-sharded dimension or ``None`` for replicated leaves (the caller —
+    ``sharding.model_shard_dims`` — derives it from the SAME ``model_spec_tail``
+    rules both execution paths trust)."""
+    if num_shards < 2:
+        raise ValueError("ShardedPackSpec needs num_shards >= 2; use make_pack_spec")
+    leaves, treedef = jax.tree.flatten(tree)
+    dims, dims_def = jax.tree.flatten(
+        shard_dims, is_leaf=lambda x: x is None or isinstance(x, int)
+    )
+    if dims_def != treedef:
+        raise ValueError("shard_dims tree does not mirror the packed tree")
+    shard_leaves = []
+    full_shapes = []
+    for leaf, dim in zip(leaves, dims):
+        shape = tuple(int(d) for d in leaf.shape)
+        full_shapes.append(shape)
+        if dim is None:
+            shard_leaves.append(leaf)
+            continue
+        if shape[dim] % num_shards:
+            raise ValueError(
+                f"leaf {shape} dim {dim} not divisible by {num_shards} shards"
+            )
+        sshape = shape[:dim] + (shape[dim] // num_shards,) + shape[dim + 1:]
+        shard_leaves.append(jax.ShapeDtypeStruct(sshape, leaf.dtype))
+    shard = make_pack_spec(jax.tree.unflatten(treedef, shard_leaves))
+    return ShardedPackSpec(
+        shard=shard,
+        shard_dims=tuple(dims),
+        full_shapes=tuple(full_shapes),
+        num_shards=num_shards,
+    )
+
+
 def is_packed(tree: PyTree) -> bool:
     return isinstance(tree, Packed)
 

@@ -90,7 +90,12 @@ class SlowMoConfig:
     @property
     def gossip_config(self) -> GossipConfig:
         kind = self.base if self.base in ("sgp", "osgp", "dpsgd") else "none"
-        return GossipConfig(kind=kind, num_workers=self.num_workers)
+        # gossip honors average_dtype the same way the exact average does:
+        # the PERMUTED message (the wire transfer) is cast, accumulation
+        # stays fp32 (see gossip.mix).
+        return GossipConfig(
+            kind=kind, num_workers=self.num_workers, comm_dtype=self.average_dtype
+        )
 
     @property
     def slowmo_active(self) -> bool:
@@ -113,16 +118,28 @@ def _bcast_workers(tree: PyTree, W: int, dtype) -> PyTree:
     )
 
 
-def make_state_pack_spec(cfg: SlowMoConfig, params0: PyTree) -> PackSpec:
+def make_state_pack_spec(cfg: SlowMoConfig, params0: PyTree, layout=None) -> PackSpec:
     """The static packing index for ``cfg.packed`` state: built from the
     parameter tree AFTER the ``param_dtype`` cast, so every trainer / test /
     checkpoint that derives it from the same model agrees on the layout.
-    ``params0`` may be concrete arrays or ``jax.eval_shape`` structs."""
-    return packing.make_pack_spec(
-        jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, cfg.param_dtype), params0
-        )
+    ``params0`` may be concrete arrays or ``jax.eval_shape`` structs.
+
+    ``layout`` (a ``WorkerLayout`` with model axes of size > 1) switches to
+    the shard-major ``packing.ShardedPackSpec``: buffers pack one row block
+    per model shard — sliced along the dims ``sharding.model_spec_tail``
+    marks — so the mapped TP round operates on the local shard and the
+    boundary all-reduce moves 1/TP of the bytes."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, cfg.param_dtype), params0
     )
+    tp = getattr(layout, "model_shard", 1) if layout is not None else 1
+    if tp > 1:
+        from ..distributed import sharding  # lazy: distributed imports core
+
+        return packing.make_sharded_pack_spec(
+            shapes, sharding.model_shard_dims(shapes, tp), tp
+        )
+    return packing.make_pack_spec(shapes)
 
 
 def init_slowmo(
@@ -179,10 +196,14 @@ def make_inner_step(
     loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     backend: comm.CommBackend | None = None,
     pack: PackSpec | None = None,
+    grad_pack: PackSpec | None = None,
 ):
     """Build one base-optimizer step over all W workers.
 
-    ``loss_fn(params_one_worker, batch_one_worker) -> scalar loss``.
+    ``loss_fn(params_one_worker, batch_one_worker) -> scalar loss``; a
+    backend-aware loss (``comm.bind_loss`` protocol, e.g. a TP-aware
+    ``models.tp.TPLoss``) is bound to ``backend`` here, so its model-axis
+    reductions execute on whichever backend the round runs on.
     Returns ``step_fn((params, inner, gossip_state, step), batch) ->
     (carry, mean_loss)`` where batch leaves have leading worker axis W
     (its local shard on the mesh backend).
@@ -192,8 +213,15 @@ def make_inner_step(
     gradients are packed straight back, and everything downstream — AR
     gradient averaging, momentum, gossip mixing — runs on whole buffers, so
     per-step collectives are one per buffer instead of one per leaf.
+
+    ``grad_pack`` (tree-carry mode on hierarchical backends) keeps the carry
+    in the per-leaf layout — the unpacked param tree is CACHED across the
+    inner loop instead of re-unpacked every step — and packs ONLY the
+    gradients around the batch-axis sync, so the per-step ``data``
+    all-reduce still moves one flat buffer.
     """
     backend = backend or comm.AxisBackend(cfg.num_workers)
+    loss_fn = comm.bind_loss(loss_fn, backend)
     vgrad = jax.vmap(jax.value_and_grad(loss_fn))
     gcfg = cfg.gossip_config
 
@@ -213,6 +241,13 @@ def make_inner_step(
             # step.  mean_keepdims reduces over worker AND batch axes in one
             # collective, so this subsumes the hierarchical within-pod sync.
             grads = jax.tree.map(backend.mean_keepdims, grads)
+        elif grad_pack is not None and backend.batch_axes:
+            # tree-carry on a hierarchical backend: pack the gradients just
+            # for the within-pod sync (ONE collective per buffer) and unpack
+            # the reduced result back into the cached tree layout.
+            grads = grad_pack.unpack(
+                backend.grad_mean(grad_pack.pack(grads, dtype=jnp.float32))
+            )
         else:
             # Hierarchical layouts: within-pod DP sync — all-reduce the
             # gradients over the backend's batch axes so every device in a
@@ -319,6 +354,7 @@ def make_slowmo_round(
     loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     backend: comm.CommBackend | None = None,
     pack: PackSpec | None = None,
+    local_tree_inner: bool | None = None,
 ):
     """Build the jittable round function.
 
@@ -336,30 +372,38 @@ def make_slowmo_round(
     flat buffers and the boundary (exact average + outer update) is one
     collective + one kernel launch.  Inside the tau-step inner loop the
     layout is chosen per base algorithm: bases that communicate parameters
-    or gradients every step (AR, SGP/OSGP/D-PSGD) run fully packed so those
-    per-step collectives are also one-per-buffer; the communication-free
-    ``local`` base runs its inner loop on the tree layout and converts at
-    the round boundary only — a per-step unpack/pack there would cost two
-    full-state copies per step for zero collective savings.  On a
-    hierarchical backend (``batch_axes``) no base is communication-free —
-    every step all-reduces gradients within the pod — so ``local`` also runs
-    fully packed there.
+    every step (SGP/OSGP/D-PSGD) or need whole-buffer gradient reductions
+    over the worker axes (AR) run fully packed so those per-step collectives
+    are one-per-buffer; the ``local`` base never communicates PARAMETERS
+    inside the loop, so its inner loop carries the tree layout — the
+    unpacked param tree is cached across all tau steps instead of being
+    re-unpacked at every ``loss_fn`` boundary — and converts to flat buffers
+    at the round boundary only.  On a hierarchical backend (``batch_axes``)
+    the local base still all-reduces GRADIENTS within the pod every step;
+    there the gradients alone are packed around that sync (``grad_pack``),
+    keeping it at one collective per buffer while the params stay cached.
+
+    ``local_tree_inner`` overrides that choice for the local base (None =
+    automatic, i.e. tree-carry): ``False`` forces the legacy fully-packed
+    inner loop — kept so ``bench_spmd_round.py`` can measure the
+    amortization delta; numerics are identical either way.
     """
     if cfg.packed and pack is None:
         raise ValueError("cfg.packed requires the PackSpec the state was built with")
     if pack is not None and not cfg.packed:
         raise ValueError("got a PackSpec but cfg.packed is False")
     backend = backend or comm.AxisBackend(cfg.num_workers)
-    # boundary-only packing is a win exactly when the inner loop is
-    # communication-free; a hierarchical backend (batch_axes) all-reduces
-    # gradients EVERY inner step, so even the 'local' base then runs fully
-    # packed to keep that per-step sync at one collective per buffer.
-    boundary_only = (
-        pack is not None
-        and cfg.base == "local"
-        and not getattr(backend, "batch_axes", ())
+    # tree-carry packing is correct exactly when the inner loop never
+    # communicates parameters: 'local' workers only touch their own copy
+    # (their gradient sync, if any, packs just the grads around the
+    # collective), so params/momentum convert at the round boundary only.
+    tree_inner = pack is not None and cfg.base == "local"
+    if local_tree_inner is not None:
+        tree_inner = tree_inner and local_tree_inner
+    grad_pack = pack if (tree_inner and getattr(backend, "batch_axes", ())) else None
+    step_fn = make_inner_step(
+        cfg, loss_fn, backend, None if tree_inner else pack, grad_pack=grad_pack
     )
-    step_fn = make_inner_step(cfg, loss_fn, backend, None if boundary_only else pack)
 
     def round_fn(state: SlowMoState, batches: PyTree, lr):
         lr = jnp.asarray(lr, jnp.float32)
@@ -371,7 +415,7 @@ def make_slowmo_round(
             return carry, loss_sum + loss
 
         inner0, params0 = state.inner, state.params
-        if boundary_only:
+        if tree_inner:
             # one unpack per ROUND (amortized over tau inner steps); the
             # SGD second-moment placeholder / none-gossip state never mix
             # with parameter-shaped trees, so they pass through packed.
@@ -394,7 +438,7 @@ def make_slowmo_round(
             (params, inner, gstate, step), loss_sum = jax.lax.fori_loop(
                 0, cfg.tau, body, acc0
             )
-        if boundary_only:
+        if tree_inner:
             params = pack.pack(params)
             inner = InnerOptState(
                 h=pack.pack(inner.h, dtype=jnp.float32),

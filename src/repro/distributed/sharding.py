@@ -38,7 +38,11 @@ _TAIL_RULES = {
     "embed": ("M", None),
     "lm_head": (None, "M"),
     "cls_head": (None, "M"),
-    "feature_proj": (None, "M"),
+    # feature_proj feeds the backbone directly: its OUTPUT is the replicated
+    # residual stream, so column-sharding it would force an all-gather right
+    # after (and breaks the manual TP loss).  It is small (~frontend_dim x
+    # d_model) — replicate it on both execution paths.
+    "feature_proj": (None, None),
     "wq": (None, "M"),
     "wk": (None, "M"),
     "wv": (None, "M"),
@@ -77,8 +81,18 @@ def _leaf_name(path) -> tuple[str, tuple[str, ...]]:
 
 
 def model_spec_tail(name: str, containers: tuple[str, ...], shape, model_size: int):
-    """Trailing-dim PartitionSpec entries for one model-parameter leaf."""
+    """Trailing-dim PartitionSpec entries for one model-parameter leaf.
+
+    THE model-sharding rule of the repo: the GSPMD dry-run
+    (``slowmo_state_shardings`` / ``serve_param_shardings``), the shard_map
+    execution path (``spmd_state_specs``) and the tensor-parallel packing
+    (``model_shard_dims`` -> ``packing.make_sharded_pack_spec``) all derive
+    which dim of which leaf shards over ``model`` from this one function, so
+    they cannot disagree.  ``model_size <= 1`` means no tensor parallelism —
+    everything replicates over (absent or size-1) model axes."""
     ndim = len(shape)
+    if model_size <= 1:
+        return (None,) * ndim
     in_moe = any(c in containers for c in _MOE_CONTAINERS)
     rule = None
     if in_moe and name in _TAIL_RULES_3PLUS and ndim >= 4 and name != "shared":
@@ -115,7 +129,35 @@ def _specs_for_tree(tree_shapes: PyTree, model_size: int, prefix: tuple = ()) ->
 # ---------------------------------------------------------------------------
 
 def _msize(layout: WorkerLayout) -> int:
-    return int(np.prod([layout.mesh.shape[a] for a in layout.model_axes]))
+    # single source of truth for the effective TP degree: launch.mesh
+    return layout.model_shard
+
+
+def _mentry(layout: WorkerLayout):
+    """Model axes as a collective/PartitionSpec entry (None if TP-free)."""
+    present = tuple(
+        a for a in layout.model_axes if a in layout.mesh.axis_names
+    )
+    if not present or _msize(layout) <= 1:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def model_shard_dims(tree_shapes: PyTree, model_size: int) -> PyTree:
+    """Per-leaf index of the model-sharded dimension (None = replicated),
+    from the SAME ``model_spec_tail`` rules as both sharding paths — the
+    input ``packing.make_sharded_pack_spec`` needs to build the per-model-
+    shard flat-buffer layout of a TP state."""
+
+    def one(path, leaf):
+        name, keys = _leaf_name(path)
+        tail = model_spec_tail(name, keys[:-1], leaf.shape, model_size)
+        for i, slot in enumerate(tail):
+            if slot == "model":
+                return i
+        return None
+
+    return jax.tree_util.tree_map_with_path(one, tree_shapes)
 
 
 def _wax_entry(layout: WorkerLayout):
@@ -124,14 +166,16 @@ def _wax_entry(layout: WorkerLayout):
     return (layout.worker_axes if len(layout.worker_axes) > 1 else layout.worker_axes[0],)
 
 
-def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: bool = False) -> PyTree:
-    """NamedSharding tree for a SlowMoState (shapes from jax.eval_shape).
+def slowmo_state_specs(layout: WorkerLayout, state_shapes, *, shard_outer: bool = False) -> PyTree:
+    """PartitionSpec tree for a SlowMoState (shapes from jax.eval_shape) —
+    the GSPMD dry-run's spec rule, shared leaf-for-leaf with the shard_map
+    path (``spmd_state_specs``); ``slowmo_state_shardings`` wraps it in
+    NamedShardings.
 
     ``shard_outer=True`` additionally ZeRO-shards the outer iterate and slow
     momentum over the worker (data) axes — a beyond-paper optimization; the
     paper-faithful baseline replicates them on every node.
     """
-    mesh = layout.mesh
     M = _msize(layout)
     wax = _wax_entry(layout)
 
@@ -177,9 +221,6 @@ def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: b
         outer_specs = jax.tree_util.tree_map_with_path(zero_spec, state_shapes.outer_params)
     u_specs = outer_specs
 
-    def ns(spec_tree):
-        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
-
     from ..core.slowmo import SlowMoState
     from ..core.base_opt import InnerOptState
     from ..core.gossip import GossipState
@@ -192,18 +233,25 @@ def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: b
         else jax.tree.map(lambda _: P(), state_shapes.gossip.stale)
     )
     return SlowMoState(
-        params=ns(params_specs),
-        inner=InnerOptState(h=ns(inner_h), v=ns(inner_v), count=NamedSharding(mesh, P())),
+        params=params_specs,
+        inner=InnerOptState(h=inner_h, v=inner_v, count=P()),
         gossip=GossipState(
-            w=NamedSharding(mesh, gossip_w_spec),
-            stale=ns(stale_specs),
-            stale_w=NamedSharding(mesh, P() if state_shapes.gossip.stale_w.ndim == 0 else gossip_w_spec),
+            w=gossip_w_spec,
+            stale=stale_specs,
+            stale_w=P() if state_shapes.gossip.stale_w.ndim == 0 else gossip_w_spec,
         ),
-        outer_params=ns(outer_specs),
-        slow_u=ns(u_specs),
-        step=NamedSharding(mesh, P()),
-        outer_step=NamedSharding(mesh, P()),
+        outer_params=outer_specs,
+        slow_u=u_specs,
+        step=P(),
+        outer_step=P(),
     )
+
+
+def slowmo_state_shardings(layout: WorkerLayout, state_shapes, *, shard_outer: bool = False) -> PyTree:
+    """NamedSharding tree for a SlowMoState on the GSPMD (dry-run) path."""
+    mesh = layout.mesh
+    specs = slowmo_state_specs(layout, state_shapes, shard_outer=shard_outer)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
 
 
 def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyTree:
@@ -211,28 +259,66 @@ def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyT
 
     Every leaf carrying a leading worker axis is sharded over the layout's
     worker mesh axes; scalars and (for ``exact_average``) the replicated
-    outer iterate / slow momentum get ``P()``.  ``state`` may be concrete
-    arrays or ``jax.eval_shape`` structs — only structure/ndim are read.
+    outer iterate / slow momentum get ``P()`` over the worker axes.  ``state``
+    may be concrete arrays or ``jax.eval_shape`` structs — only structure,
+    ndim and (for TP) trailing shapes are read.
 
-    Packed flat-buffer states (``repro.core.packing``) need no special
-    casing: a ``(W, rows, 1024)`` buffer is just one leaf whose leading axis
-    is the worker axis, and the replicated ``(rows, 1024)`` outer buffers
-    fall into the ``P()`` branch like any other worker-axis-free leaf.
+    Tensor-parallel layouts (model axes of size > 1) additionally shard the
+    trailing dims of every parameter-shaped leaf via the SAME
+    ``model_spec_tail`` rules the GSPMD dry-run trusts (one rule, both
+    paths): params / momentum / gossip messages get ``P(wax, *model_tail)``,
+    and the "replicated" outer iterate / slow momentum are replicated over
+    the worker axes only — over ``model`` they stay sharded, so the outer
+    update runs on the local shard.
+
+    Packed flat-buffer states (``repro.core.packing``): a ``(W, rows, 1024)``
+    buffer is one leaf whose leading axis is the worker axis; under TP the
+    state must be packed with the shard-major ``ShardedPackSpec``, whose row
+    dimension shards over the model axes — each device then holds exactly
+    its local model shard of every buffer.
     """
     from ..core.base_opt import InnerOptState
     from ..core.gossip import GossipState
     from ..core.slowmo import SlowMoState
+    from ..core import packing
 
     wentry = _wax_entry(layout)[0]
+    mentry = _mentry(layout)
+    M = _msize(layout)
+    packed = packing.is_packed(state.params)
 
     def wspec(leaf):
         return P(wentry) if getattr(leaf, "ndim", 0) else P()
 
-    def wtree(tree):
-        return jax.tree.map(wspec, tree)
+    if mentry is None:
+        def wtree(tree):
+            return jax.tree.map(wspec, tree)
 
-    def rep(tree):
-        return jax.tree.map(lambda _: P(), tree)
+        def rep(tree):
+            return jax.tree.map(lambda _: P(), tree)
+    elif packed:
+        # shard-major flat buffers: rows (dim -2) shard over model
+        def wtree(tree):
+            return jax.tree.map(
+                lambda leaf: P(wentry, mentry)
+                if getattr(leaf, "ndim", 0) >= 2
+                else wspec(leaf),
+                tree,
+            )
+
+        def rep(tree):
+            return jax.tree.map(
+                lambda leaf: P(mentry) if getattr(leaf, "ndim", 0) >= 2 else P(),
+                tree,
+            )
+    else:
+        # per-leaf tree layout: trailing dims via model_spec_tail (the
+        # dry-run's rule), leading worker axis over the worker mesh axes
+        def wtree(tree):
+            return _specs_for_tree(tree, M, prefix=(wentry,))
+
+        def rep(tree):
+            return _specs_for_tree(tree, M, prefix=())
 
     outer = rep if exact_average else wtree
     return SlowMoState(

@@ -38,9 +38,18 @@ per-worker batch is the concatenation of the pod's data shards; equivalence
 and the two-level replica-group structure are pinned by
 ``tests/test_hierarchical_spmd.py``.
 
-Current scope: worker + batch axes carry the whole mesh — model-parallel
-axes under shard_map (``auto`` axes) are a ROADMAP follow-on, so the
-layout's model axes must have size 1.
+Tensor-parallel layouts (``make_hierarchical_layout(pods, data, tp)`` /
+``make_spmd_layout(workers, tp)``) run the FULL (pod, data, model) mesh
+through the same wrapper: every parameter-shaped leaf is additionally
+model-sharded over the ``model`` axes via the same ``model_spec_tail`` rules
+the GSPMD dry-run uses, the loss executes Megatron-style — column-parallel
+in, row-parallel out, ``psum`` over ``model`` through the backend's
+model-axis hooks (``repro.models.tp``) — and every state collective (the
+per-step ``data`` gradient sync, the boundary ``pod`` all-reduce, gossip
+permutes) moves only the LOCAL model shard, so boundary traffic shrinks by
+1/TP.  Packed TP states use the shard-major ``packing.ShardedPackSpec``;
+equivalence with the TP-free round and the three-level collective structure
+are pinned by ``tests/test_tp_spmd.py``.
 """
 from __future__ import annotations
 
@@ -51,7 +60,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import comm, slowmo
+from ..core import comm, packing, slowmo
 from ..core.slowmo import SlowMoConfig
 from ..launch import mesh as mesh_lib
 from ..launch.mesh import WorkerLayout
@@ -86,6 +95,21 @@ def _validate(cfg: SlowMoConfig, layout: WorkerLayout) -> int:
             "gossip bases need one worker per device on the mesh path "
             f"(num_workers={cfg.num_workers}, worker devices={n_dev})"
         )
+    if layout.model_shard > 1:
+        # TP composes with everything EXCEPT reductions that need the full
+        # (cross-shard) parameter vector on one device; fail eagerly with
+        # the reason instead of silently computing a per-shard quantity.
+        if cfg.inner.clip_norm:
+            raise ValueError(
+                "global-norm gradient clipping is not yet TP-aware: the "
+                "per-worker norm would miss the other model shards (and "
+                "count replicated leaves once per shard on packed state)"
+            )
+        if cfg.track_drift:
+            raise ValueError(
+                "track_drift is not yet TP-aware: the drift sum would count "
+                "replicated leaves once per model shard"
+            )
     return n_dev
 
 
@@ -106,10 +130,34 @@ def _validate_batches(layout: WorkerLayout, batches: PyTree) -> None:
             )
 
 
+def _validate_tp_loss(layout: WorkerLayout, loss_fn) -> None:
+    """TP layouts shard every rule-matched parameter leaf, so the loss MUST
+    be backend-aware (the ``comm.bind_loss`` protocol, e.g.
+    ``models.tp.TPLoss``) to deposit its model-axis psums; a plain
+    ``(params, batch)`` callable would consume the shards as if they were
+    full parameters and silently train on 1/TP of every contraction."""
+    if layout.model_shard > 1 and not hasattr(loss_fn, "bind_backend"):
+        raise ValueError(
+            "TP layouts need a backend-aware loss (models.tp.TPLoss / "
+            "make_tp_loss): a plain loss cannot psum its model-sharded "
+            "matmuls over the 'model' axes"
+        )
+
+
 def mesh_backend(cfg: SlowMoConfig, layout: WorkerLayout) -> comm.MeshBackend:
     n_dev = _validate(cfg, layout)
+    model_axes = tuple(
+        a
+        for a in layout.model_axes
+        if a in layout.mesh.axis_names and layout.mesh.shape[a] > 1
+    )
     return comm.MeshBackend(
-        layout.worker_axes, cfg.num_workers, n_dev, batch_axes=layout.batch_axes
+        layout.worker_axes,
+        cfg.num_workers,
+        n_dev,
+        batch_axes=layout.batch_axes,
+        model_axes=model_axes,
+        model_shards=layout.model_shard,
     )
 
 
@@ -120,6 +168,7 @@ def build_spmd_round(
     state: PyTree,
     batches: PyTree,
     pack=None,
+    local_tree_inner=None,
 ):
     """Explicit builder: returns the jitted shard-mapped round function.
 
@@ -139,8 +188,30 @@ def build_spmd_round(
     touch a state object after passing it in.
     """
     backend = mesh_backend(cfg, layout)
+    _validate_tp_loss(layout, loss_fn)
     _validate_batches(layout, batches)
-    body = slowmo.make_slowmo_round(cfg, loss_fn, backend, pack=pack)
+    body_pack = pack
+    if pack is not None and backend.model_shards > 1:
+        if not isinstance(pack, packing.ShardedPackSpec):
+            raise ValueError(
+                "packed TP rounds need the shard-major ShardedPackSpec — "
+                "build it with make_state_pack_spec(cfg, params, layout=layout)"
+            )
+        if pack.num_shards != backend.model_shards:
+            raise ValueError(
+                f"PackSpec was built for {pack.num_shards} model shards but "
+                f"the layout has {backend.model_shards}"
+            )
+        # inside the mapped body every device holds one shard block, laid
+        # out by the plain per-shard spec
+        body_pack = pack.shard
+    elif isinstance(pack, packing.ShardedPackSpec):
+        raise ValueError(
+            "got a ShardedPackSpec but the layout has no model axes of size > 1"
+        )
+    body = slowmo.make_slowmo_round(
+        cfg, loss_fn, backend, pack=body_pack, local_tree_inner=local_tree_inner
+    )
     state_specs = sharding.spmd_state_specs(
         layout, state, exact_average=cfg.exact_average
     )
@@ -163,6 +234,7 @@ def make_spmd_slowmo_round(
     loss_fn: Callable[[PyTree, PyTree], Any],
     layout: WorkerLayout,
     pack=None,
+    local_tree_inner=None,
 ):
     """Drop-in replacement for ``jax.jit(slowmo.make_slowmo_round(...))``.
 
@@ -172,6 +244,7 @@ def make_spmd_slowmo_round(
     ``build_spmd_round``).
     """
     _validate(cfg, layout)
+    _validate_tp_loss(layout, loss_fn)
     cache: dict = {}
 
     def round_fn(state, batches, lr):
@@ -182,11 +255,13 @@ def make_spmd_slowmo_round(
         _validate_batches(layout, batches)
         key = (jax.tree.structure(state), jax.tree.structure(batches))
         if key not in cache:
-            cache[key] = build_spmd_round(cfg, loss_fn, layout, state, batches, pack)
+            cache[key] = build_spmd_round(
+                cfg, loss_fn, layout, state, batches, pack, local_tree_inner
+            )
         return cache[key](state, batches, lr)
 
     round_fn.build = lambda state, batches: build_spmd_round(
-        cfg, loss_fn, layout, state, batches, pack
+        cfg, loss_fn, layout, state, batches, pack, local_tree_inner
     )
     return round_fn
 

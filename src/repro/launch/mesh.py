@@ -56,30 +56,53 @@ def make_worker_mesh(num_workers: int, axis: str = "data") -> Mesh:
     return Mesh(np.asarray(devs[:num_workers]), (axis,))
 
 
-def make_spmd_layout(num_workers: int) -> WorkerLayout:
-    """WorkerLayout for the shard_map path: all mesh axes are worker axes."""
-    mesh = make_worker_mesh(num_workers)
-    return WorkerLayout(mesh, worker_axes=("data",), batch_axes=(), model_axes=())
+def make_spmd_layout(num_workers: int, tp: int = 1) -> WorkerLayout:
+    """WorkerLayout for the shard_map path: one worker per ``data`` row.
 
-
-def make_hierarchical_layout(pods: int, data: int) -> WorkerLayout:
-    """Hierarchical (pod, data) WorkerLayout for the shard_map path.
-
-    ``pods`` SlowMo workers, each an AllReduce DP group of ``data`` devices:
-    the first ``pods * data`` devices form a 2-D mesh, SlowMo state and the
-    slow-momentum collectives live on ``pod``, each worker's batch is
-    sharded (and its gradients synced every inner step) over ``data``.  On a
-    CPU-only host set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-    before the first jax import.
-    """
-    n = pods * data
+    ``tp > 1`` adds a ``model`` axis: each worker becomes a tensor-parallel
+    group of ``tp`` devices holding model shards of its parameters (the loss
+    must be TP-aware — see ``repro.models.tp``)."""
+    if tp <= 1:
+        mesh = make_worker_mesh(num_workers)
+        return WorkerLayout(mesh, worker_axes=("data",), batch_axes=(), model_axes=())
+    n = num_workers * tp
     devs = jax.devices()
     if len(devs) < n:
         raise ValueError(
-            f"need {n} devices for a ({pods} pods x {data} data) mesh, "
+            f"need {n} devices for a ({num_workers} data x {tp} model) mesh, "
             f"have {len(devs)}"
         )
-    mesh = Mesh(np.asarray(devs[:n]).reshape(pods, data), ("pod", "data"))
+    mesh = Mesh(np.asarray(devs[:n]).reshape(num_workers, tp), ("data", "model"))
+    return make_layout(mesh, "flat", spmd=True)
+
+
+def make_hierarchical_layout(pods: int, data: int, tp: int = 1) -> WorkerLayout:
+    """Hierarchical (pod, data[, model]) WorkerLayout for the shard_map path.
+
+    ``pods`` SlowMo workers, each an AllReduce DP group of ``data`` devices:
+    the first ``pods * data * tp`` devices form the mesh, SlowMo state and
+    the slow-momentum collectives live on ``pod``, each worker's batch is
+    sharded (and its gradients synced every inner step) over ``data``.
+    ``tp > 1`` makes every (pod, data) cell a tensor-parallel group of ``tp``
+    devices along a ``model`` axis — the full production (pod, data, model)
+    topology, with parameters model-sharded inside each worker and the
+    loss's Megatron-style reductions psummed over ``model`` only.  On a
+    CPU-only host set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before the first jax import.
+    """
+    n = pods * data * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"need {n} devices for a ({pods} pods x {data} data"
+            f"{f' x {tp} model' if tp > 1 else ''}) mesh, have {len(devs)}"
+        )
+    if tp <= 1:
+        mesh = Mesh(np.asarray(devs[:n]).reshape(pods, data), ("pod", "data"))
+    else:
+        mesh = Mesh(
+            np.asarray(devs[:n]).reshape(pods, data, tp), ("pod", "data", "model")
+        )
     return make_layout(mesh, "hierarchical", spmd=True)
 
 
@@ -113,17 +136,38 @@ class WorkerLayout:
         """All non-model axes (used by serve-path batch sharding)."""
         return tuple(a for a in self.mesh.axis_names if a not in self.model_axes)
 
+    @property
+    def model_shard(self) -> int:
+        """Tensor-parallel degree: total devices along the model axes that
+        are actually present in the mesh (1 = no tensor parallelism)."""
+        return (
+            int(
+                np.prod(
+                    [
+                        self.mesh.shape[a]
+                        for a in self.model_axes
+                        if a in self.mesh.axis_names
+                    ]
+                )
+            )
+            or 1
+        )
+
 
 def validate_spmd_model_axes(layout: WorkerLayout) -> None:
     """THE model-axis rule of the shard_map path, shared by
     ``make_layout(spmd=True)`` and ``repro.distributed.spmd._validate``:
-    until model parallelism composes with the mapped round (ROADMAP), every
-    model axis present in the mesh must have size 1."""
+    model axes may have any size (tensor-parallel workers), but they must be
+    DISJOINT from the worker and batch axes — a mesh axis cannot both shard
+    parameters and carry SlowMo workers / batch shards."""
     for a in layout.model_axes:
-        if a in layout.mesh.axis_names and layout.mesh.shape[a] != 1:
+        if a in layout.worker_axes:
             raise ValueError(
-                "spmd path does not yet compose with model parallelism: "
-                f"model axis {a!r} has size {layout.mesh.shape[a]} (need 1)"
+                f"axis {a!r} cannot be both a worker axis and a model axis"
+            )
+        if a in layout.batch_axes:
+            raise ValueError(
+                f"axis {a!r} cannot be both a batch axis and a model axis"
             )
 
 
@@ -132,8 +176,9 @@ def make_layout(mesh: Mesh, style: str = "flat", *, spmd: bool = False) -> Worke
     offending axis named, not at lowering time.
 
     ``spmd=True`` additionally validates the layout for the shard_map
-    execution path (``repro.distributed.spmd``), which does not yet compose
-    with model parallelism: every model axis present must have size 1.
+    execution path (``repro.distributed.spmd``): model axes (any size —
+    tensor-parallel workers run through the mapped round) must be disjoint
+    from the worker and batch axes.
     """
     axes = mesh.axis_names
     if style == "flat":

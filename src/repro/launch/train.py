@@ -61,25 +61,41 @@ def main():
     )
     ap.add_argument("--pods", type=int, default=2, help="hierarchical: worker (pod) count")
     ap.add_argument("--dp", type=int, default=2, help="hierarchical: data shards per pod")
+    ap.add_argument(
+        "--tp",
+        type=int,
+        default=1,
+        help="tensor-parallel degree: every worker becomes a group of --tp "
+        "devices along a 'model' mesh axis holding Megatron-style shards of "
+        "its parameters (column-parallel qkv/up, row-parallel out/down, "
+        "vocab-parallel embed/CE; activations psum over 'model' only), so "
+        "hierarchical meshes are (--pods x --dp x --tp) and flat meshes "
+        "(--workers x --tp).  Needs --mesh host and a TP-capable arch "
+        "(dense family, act != swiglu — e.g. hubert-xlarge)",
+    )
     args = ap.parse_args()
+
+    if args.tp > 1 and args.mesh != "host":
+        raise SystemExit("--tp needs --mesh host (tensor parallelism is a mesh-path feature)")
 
     layout = None
     if args.mesh == "host":
         if args.layout == "hierarchical":
             from .mesh import make_hierarchical_layout
 
-            layout = make_hierarchical_layout(args.pods, args.dp)
+            layout = make_hierarchical_layout(args.pods, args.dp, args.tp)
             if args.workers != layout.num_workers:
                 print(
                     f"hierarchical layout: num_workers := {layout.num_workers} "
                     f"pods (ignoring --workers {args.workers}); each worker's "
                     f"batch splits over {args.dp} devices"
+                    + (f", params over {args.tp} model shards" if args.tp > 1 else "")
                 )
                 args.workers = layout.num_workers
         else:
             from .mesh import make_spmd_layout
 
-            layout = make_spmd_layout(args.workers)
+            layout = make_spmd_layout(args.workers, args.tp)
         print(f"mesh path ({args.layout}): {args.workers} workers over {layout.mesh}")
 
     cfg = get_config(args.arch, reduced=not args.full)

@@ -1,0 +1,280 @@
+"""Tensor-parallel (Megatron-style) losses for the mapped SlowMo round.
+
+Inside ``shard_map`` every parameter leaf arrives as its LOCAL model shard
+(sliced along the dim ``sharding.model_spec_tail`` marks), so the loss must
+run its matmuls shard-locally and deposit the reductions the math requires
+through the backend's model-axis hooks (``repro.core.comm``):
+
+* column-parallel matmul (weight sharded on the OUTPUT dim): forward is
+  local, but the backward pass w.r.t. the replicated input is partial — the
+  input is wrapped in ``copy_to_tp`` (identity forward, psum backward);
+* row-parallel matmul (weight sharded on the INPUT/contracting dim): the
+  forward result is partial — wrapped in ``reduce_from_tp`` (psum forward,
+  identity backward);
+* vocab-parallel embedding / cross-entropy: masked local lookup + psum, and
+  a logsumexp assembled from per-shard max (pmax, under stop_gradient) and
+  per-shard exp-sums (psum).
+
+Both operators are explicit ``jax.custom_vjp``s, so gradient correctness
+never leans on collective transpose rules; gradients leave the loss already
+model-complete and the rest of the round (grad_mean over ``data``, the
+boundary all-reduce over ``pod``) operates on local shards unchanged.
+
+The entry point is ``TPLoss`` — a loss that knows it needs a backend.
+``make_slowmo_round`` binds it via the ``comm.bind_loss`` protocol: bound to
+a ``MeshBackend`` with model axes it executes real ``psum``s over ``model``;
+bound to the ``AxisBackend`` oracle (or a TP-free mesh) every hook is the
+identity and the SAME loss computes the unsharded math — which is what lets
+one loss serve as its own equivalence oracle in ``tests/test_tp_spmd.py``.
+
+``make_tp_loss(cfg)`` builds the TP-aware dense-family loss.  Constraints
+(eagerly checked): dense family; ``act != 'swiglu'`` (the fused gate+up
+columns of ``wi`` interleave across model shards — de-fusing them is a
+param-layout change tracked on the ROADMAP); head counts divisible by TP.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common
+
+PyTree = Any
+
+
+class TPLoss:
+    """Backend-bindable loss: ``factory(backend) -> loss_fn(params, batch)``.
+
+    ``make_inner_step`` binds it to the round's CommBackend through
+    ``comm.bind_loss``; calling it unbound runs the oracle (identity-hook)
+    semantics so it also works as a plain loss on full parameters.
+    """
+
+    def __init__(self, factory: Callable):
+        self._factory = factory
+
+    def bind_backend(self, backend):
+        return self._factory(backend)
+
+    def __call__(self, params, batch):
+        from ..core import comm  # lazy: models must stay importable alone
+
+        return self._factory(comm.AxisBackend(1))(params, batch)
+
+
+# ---------------------------------------------------------------------------
+# the conjugate region operators (Megatron's f / g)
+# ---------------------------------------------------------------------------
+
+def copy_to_tp(backend, x):
+    """Enter the tensor-parallel region: identity forward, psum backward.
+
+    Wrap every REPLICATED activation that feeds a column-parallel matmul —
+    each shard's backward contribution covers only its own output columns,
+    so the input cotangent must be psummed over ``model`` for upstream
+    (replicated) parameters to receive complete gradients."""
+
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    f.defvjp(lambda x: (x, None), lambda _, g: (backend.model_psum(g),))
+    return f(x)
+
+
+def reduce_from_tp(backend, x):
+    """Leave the tensor-parallel region: psum forward, identity backward.
+
+    Wrap every row-parallel matmul output (a partial sum over the sharded
+    contracting dim); the output cotangent is already replicated, so the
+    backward is the identity."""
+
+    @jax.custom_vjp
+    def f(x):
+        return backend.model_psum(x)
+
+    f.defvjp(lambda x: (backend.model_psum(x), None), lambda _, g: (g,))
+    return f(x)
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding + cross-entropy
+# ---------------------------------------------------------------------------
+
+def vocab_parallel_embed(backend, table, tokens):
+    """Lookup into a vocab-sharded ``(V/TP, d)`` embedding table: rows owned
+    by other shards contribute zeros, the psum assembles the full vector.
+    With TP-free backends (full table) this is a plain lookup."""
+    if backend.model_shards == 1:
+        return table[tokens]
+    v_local = table.shape[0]
+    local = tokens - backend.model_index() * v_local
+    valid = (local >= 0) & (local < v_local)
+    x = table[jnp.clip(local, 0, v_local - 1)]
+    x = x * valid[..., None].astype(x.dtype)
+    return reduce_from_tp(backend, x)
+
+
+def vocab_parallel_xent(backend, logits, labels, vocab_size, mask=None):
+    """Mean cross-entropy over vocab-sharded ``(…, V/TP)`` logits.
+
+    The logsumexp is assembled from the per-shard max (pmax, under
+    stop_gradient — gradients flow through the exp-sums, as in
+    ``jax.nn.logsumexp``) and the psum of per-shard exp-sums; the label
+    logit is a masked local select + psum.  Falls back to the plain
+    ``common.softmax_xent`` when the logits carry the full vocab (TP-free
+    backend, or a head the divisibility guard left replicated)."""
+    if logits.shape[-1] == vocab_size:
+        return common.softmax_xent(logits, labels, mask)
+    lf = logits.astype(jnp.float32)
+    v_local = lf.shape[-1]
+    lo = backend.model_index() * v_local
+
+    # cross-shard max for softmax stabilization; zero gradient by
+    # construction (as in jax.nn.logsumexp — gradients flow through the
+    # exp-sums), and pmax has no differentiation rule anyway
+    @jax.custom_vjp
+    def _pmax_nograd(x):
+        return backend.model_pmax(x)
+
+    _pmax_nograd.defvjp(
+        lambda x: (backend.model_pmax(x), None),
+        lambda _, g: (jnp.zeros_like(g),),
+    )
+    m = _pmax_nograd(jnp.max(lf, axis=-1, keepdims=True))
+    se = reduce_from_tp(backend, jnp.sum(jnp.exp(lf - m), axis=-1))
+    lse = m[..., 0] + jnp.log(se)
+    local_lab = labels - lo
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = reduce_from_tp(
+        backend,
+        jnp.sum(jnp.where(vocab_iota == local_lab[..., None], lf, 0.0), axis=-1),
+    )
+    nll = lse - ll
+    if mask is not None:
+        maskf = mask.astype(jnp.float32)
+        return jnp.sum(nll * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# dense-family TP loss
+# ---------------------------------------------------------------------------
+
+def _local_cfg(cfg: ModelConfig, attn_params) -> ModelConfig:
+    """Per-shard view of the config: head counts scaled down to what the
+    LOCAL column-parallel qkv projections produce (read off the shard's
+    actual trailing dims, so the same code runs on full params too)."""
+    hd = cfg.resolved_head_dim
+    hq = attn_params["wq"].shape[-1] // hd
+    hkv = attn_params["wk"].shape[-1] // hd
+    # pin head_dim: with fewer local heads, the derived d_model // n_heads
+    # would no longer be the true per-head width
+    return cfg.replace(n_heads=hq, n_kv_heads=hkv, head_dim=hd)
+
+
+def _tp_block(cfg: ModelConfig, backend, x, positions, bp):
+    """One transformer block, Megatron-parallel: column-parallel qkv (heads
+    sharded), local attention on the shard's heads, row-parallel wo + psum;
+    column-parallel mlp up, row-parallel mlp down + psum.  Norms and the
+    residual stream stay replicated."""
+    lcfg = _local_cfg(cfg, bp["attn"])
+    h = common.apply_norm(cfg, x, bp.get("ln1"))
+    h = copy_to_tp(backend, h)
+    q, k, v = common.qkv_project(lcfg, bp["attn"], h, positions)
+    o = common.attention(lcfg, q, k, v)
+    x = x + reduce_from_tp(backend, common.attn_out(lcfg, bp["attn"], o))
+    h = common.apply_norm(cfg, x, bp.get("ln2"))
+    h = copy_to_tp(backend, h)
+    x = x + reduce_from_tp(backend, common.mlp(cfg, bp["mlp"], h))
+    return x
+
+
+def _dense_tp_loss(cfg: ModelConfig, backend, params, batch) -> jnp.ndarray:
+    import functools
+
+    if cfg.modality == "audio":
+        feats = batch["features"].astype(cfg.dtype)
+        # feature_proj is replicated by rule (its output is the residual
+        # stream) — plain matmul
+        x = feats @ params["feature_proj"].astype(cfg.dtype)
+        if "mask" in batch:
+            m = batch["mask"][..., None].astype(cfg.dtype)
+            x = x * (1 - m) + params["mask_embed"].astype(cfg.dtype) * m
+    else:
+        x = vocab_parallel_embed(backend, params["embed"], batch["tokens"]).astype(
+            cfg.dtype
+        )
+    B, S = x.shape[:2]
+    positions = jnp.arange(S, dtype=jnp.int32)[None]
+
+    block = functools.partial(_tp_block, cfg, backend)
+    if cfg.remat:
+        block = jax.checkpoint(block, static_argnums=())
+
+    def body(carry, bp):
+        return block(carry, positions, bp), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
+    x = common.apply_norm(cfg, x, params.get("final_norm"))
+    # the head is column-parallel on vocab: psum the backward into the
+    # replicated final norm / residual stream
+    x = copy_to_tp(backend, x)
+    if cfg.modality == "audio":
+        head = params["cls_head"]
+        logits = x @ head.astype(x.dtype)
+        return vocab_parallel_xent(
+            backend, logits, batch["labels"], cfg.vocab_size, batch["mask"]
+        )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return vocab_parallel_xent(
+        backend, logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab_size
+    )
+
+
+def make_tp_loss(cfg: ModelConfig) -> TPLoss:
+    """TP-aware training loss for ``cfg``; numerically the bundle's
+    ``loss_fn`` when bound to a backend without model axes."""
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            f"tensor-parallel loss only implemented for the dense family "
+            f"(got {cfg.family!r}); MoE expert parallelism is a ROADMAP item"
+        )
+    if cfg.act == "swiglu":
+        raise NotImplementedError(
+            "swiglu's fused gate+up wi columns interleave across model "
+            "shards under the (None, 'model') rule; de-fusing wi into "
+            "w_gate/w_up is the param-layout change tracked on the ROADMAP "
+            "(hubert-xlarge, act='gelu', runs today)"
+        )
+    def factory(backend):
+        tp = backend.model_shards
+        if tp > 1:
+            # every dim this loss TREATS as sharded must actually shard:
+            # model_spec_tail's divisibility guard silently replicates a
+            # non-divisible leaf, and psumming an already-complete value
+            # (or offsetting into a full table) would silently corrupt the
+            # forward/backward — reject eagerly instead.
+            bad = {
+                "n_heads": cfg.n_heads,
+                "n_kv_heads": cfg.n_kv_heads,
+                "d_ff": cfg.d_ff,
+                "vocab_size": cfg.vocab_size,
+            }
+            offenders = {k: v for k, v in bad.items() if v % tp}
+            if offenders:
+                raise ValueError(
+                    f"dense TP loss needs {list(bad)} divisible by the "
+                    f"{tp}-way model axes; offending: {offenders}"
+                )
+
+        def loss_fn(params, batch):
+            return _dense_tp_loss(cfg, backend, params, batch)
+
+        return loss_fn
+
+    return TPLoss(factory)

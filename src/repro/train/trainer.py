@@ -81,9 +81,11 @@ class Trainer:
         self.pack = None
         if smcfg.packed:
             # flat-buffer execution: the static packing index is derived from
-            # the model's parameter SHAPES (no init FLOPs spent here).
+            # the model's parameter SHAPES (no init FLOPs spent here).  On a
+            # tensor-parallel layout it is the shard-major ShardedPackSpec,
+            # so every device's buffers hold exactly its model shard.
             pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-            self.pack = slowmo.make_state_pack_spec(smcfg, pshapes)
+            self.pack = slowmo.make_state_pack_spec(smcfg, pshapes, layout=layout)
         if layout is not None:
             # mesh-lowered path: worker axis sharded over the layout's mesh,
             # collectives lower to all-reduce / collective-permute.  On a
@@ -101,8 +103,16 @@ class Trainer:
                 )
             from ..distributed import spmd
 
+            loss_fn = model.loss_fn
+            if getattr(layout, "model_shard", 1) > 1:
+                # tensor-parallel workers: the loss must run its matmuls on
+                # local model shards with psum over 'model' — swap in the
+                # backend-bindable TP loss (same math on a TP-free backend)
+                from ..models import tp as tp_lib
+
+                loss_fn = tp_lib.make_tp_loss(model.config)
             self.round_fn = spmd.make_spmd_slowmo_round(
-                smcfg, model.loss_fn, layout, pack=self.pack
+                smcfg, loss_fn, layout, pack=self.pack
             )
         else:
             # the state argument is donated: XLA writes the next round's

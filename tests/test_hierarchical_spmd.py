@@ -10,8 +10,12 @@ the hierarchical execution path on a (pods=2, data=2) mesh:
   worker), to 1e-6 (relative to leaf scale: fp non-associativity of the
   two-level mean makes bitwise equality impossible, and e.g. ``slow_u`` is
   amplified by 1/gamma) over 3 rounds, across bases {local, ar, sgp},
-  packed x tree layouts, and bf16 ``average_dtype`` (which IS bit-identical:
-  both backends round through the same bf16 lattice);
+  packed x tree layouts, and bf16 ``average_dtype``.  The bf16 BOUNDARY
+  average is bit-identical (both backends round through the same bf16
+  lattice); bf16 GOSSIP messages (PR 4: ppermutes honor average_dtype) are
+  rounded every step, so a pre-existing ~1e-7 backend difference can flip a
+  near-tie cast by one bf16 ulp (~3e-5 relative) — the sgp bf16 case
+  asserts a 2-ulp bound instead;
 
 * TWO-LEVEL HLO STRUCTURE — on the packed layout, per inner step exactly one
   gradient all-reduce whose replica groups span only the ``data`` axis, and
@@ -92,13 +96,19 @@ for name, packed, avg in CASES:
     flat_a, _ = jax.tree_util.tree_flatten_with_path(state_a)
     flat_m = jax.tree.leaves(state_m)
     assert len(flat_a) == len(flat_m)
+    # gossip bases with bf16 messages: every step's permuted message is
+    # rounded to bf16, so a ~1e-7 backend difference entering a near-tie
+    # cast flips one bf16 ulp (2^-15 relative ~ 3e-5); everything else
+    # (incl. the bf16 boundary average alone) stays at 1e-6
+    tol = 2 * 2.0**-15 if (avg == "bf16" and "sgp" in name) else 1e-6
     for (path, a), m in zip(flat_a, flat_m):
         a, m = np.asarray(a, np.float32), np.asarray(m, np.float32)
         scale = max(1.0, float(np.max(np.abs(m))) if m.size else 1.0)
         np.testing.assert_allclose(
-            a / scale, m / scale, atol=1e-6, rtol=0,
+            a / scale, m / scale, atol=tol, rtol=0,
             err_msg=f"{name} packed={packed} avg={avg}: {jax.tree_util.keystr(path)}")
-    assert abs(float(met_a["loss"]) - float(met_m["loss"])) < 1e-5, (name, packed, avg)
+    loss_tol = 1e-5 if tol == 1e-6 else 1e-3  # bf16 gossip: ulp flips reach the loss
+    assert abs(float(met_a["loss"]) - float(met_m["loss"])) < loss_tol, (name, packed, avg)
     print("HIER-EQ-OK", name, f"packed={int(packed)}", f"avg={avg or 'f32'}")
 
 # --- two-level collective structure (replica groups, packed layout) --------

@@ -48,6 +48,21 @@ class TestLayoutBookkeeping:
         assert lay.effective_batch(per_worker_batch) == pods * per_worker_batch
 
     @given(
+        pods=st.integers(min_value=1, max_value=8),
+        data=st.integers(min_value=1, max_value=8),
+        tp=st.integers(min_value=1, max_value=8),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_tp_factorization(self, pods, data, tp):
+        """(pod, data, model): workers/batch bookkeeping is TP-independent —
+        model shards change WHAT each device holds, not who is a worker."""
+        lay = make_layout(hier_mesh(pods, data, tp), "hierarchical")
+        assert lay.model_shard == tp
+        assert lay.num_workers == pods
+        assert lay.batch_shard == data
+        assert lay.data_axes == ("pod", "data")
+
+    @given(
         pods=st.integers(min_value=1, max_value=16),
         data=st.integers(min_value=1, max_value=16),
         shard_batch=st.integers(min_value=1, max_value=64),
@@ -91,13 +106,26 @@ class TestMakeLayoutValidation:
         with pytest.raises(ValueError, match="'data' axis"):
             make_layout(FakeMesh(("pod", "model"), (4, 1)), "hierarchical")
 
-    def test_spmd_rejects_model_parallel(self):
-        with pytest.raises(ValueError, match="model axis 'model' has size 4"):
-            make_layout(hier_mesh(2, 2, model=4), "hierarchical", spmd=True)
+    def test_spmd_accepts_model_parallel(self):
+        """PR 4: model axes of any size run through the mapped round."""
+        lay = make_layout(hier_mesh(2, 2, model=4), "hierarchical", spmd=True)
+        assert lay.num_workers == 2
+        assert lay.model_shard == 4
 
     def test_spmd_allows_size_one_model_axis(self):
         lay = make_layout(hier_mesh(2, 2, model=1), "hierarchical", spmd=True)
         assert lay.num_workers == 2
+        assert lay.model_shard == 1
+
+    def test_spmd_rejects_model_axis_overlapping_worker_axis(self):
+        from repro.launch.mesh import WorkerLayout, validate_spmd_model_axes
+
+        lay = WorkerLayout(
+            hier_mesh(2, 2), worker_axes=("pod",), batch_axes=("data",),
+            model_axes=("pod",),
+        )
+        with pytest.raises(ValueError, match="both a worker axis and a model axis"):
+            validate_spmd_model_axes(lay)
 
     def test_unknown_style(self):
         with pytest.raises(ValueError, match="unknown layout style"):
@@ -132,3 +160,37 @@ class TestSpmdValidate:
     def test_hierarchical_layout_passes(self):
         lay = make_layout(hier_mesh(2, 2), "hierarchical")
         assert spmd._validate(self.cfg(), lay) == 2
+
+    def test_tp_layout_passes(self):
+        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
+        assert spmd._validate(self.cfg(), lay) == 2
+
+    def test_tp_rejects_clip_norm(self):
+        from repro.core.base_opt import InnerOptConfig
+
+        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
+        cfg = SlowMoConfig(
+            num_workers=2, tau=2, inner=InnerOptConfig(clip_norm=1.0)
+        )
+        with pytest.raises(ValueError, match="clip"):
+            spmd._validate(cfg, lay)
+
+    def test_tp_rejects_track_drift(self):
+        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
+        cfg = SlowMoConfig(num_workers=2, tau=2, track_drift=True)
+        with pytest.raises(ValueError, match="track_drift"):
+            spmd._validate(cfg, lay)
+
+    def test_tp_rejects_plain_loss(self):
+        """A non-backend-aware loss on a TP layout would silently consume
+        model SHARDS as full params — must fail at construction."""
+        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
+        with pytest.raises(ValueError, match="backend-aware"):
+            spmd.make_spmd_slowmo_round(self.cfg(), lambda p, b: 0.0, lay)
+
+    def test_tp_accepts_bindable_loss(self):
+        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
+        from repro.models.tp import TPLoss
+
+        loss = TPLoss(lambda backend: (lambda p, b: 0.0))
+        assert callable(spmd.make_spmd_slowmo_round(self.cfg(), loss, lay))

@@ -11,7 +11,8 @@ acceptance criteria of the packing refactor:
 * gossip rolls move one buffer (one collective-permute per hop branch, not
   one per leaf) and AR averages one gradient buffer per step;
 * ``average_dtype=bf16`` halves the bytes of that single boundary
-  all-reduce.
+  all-reduce, AND (PR 4) of every gossip collective-permute: the permuted
+  packed buffer is cast to bf16 on the wire.
 
 The exact-average pin runs in tier-1 (one subprocess case, ~1 min); the
 gossip/AR/bf16 sweep costs several compiles and is marked ``slow`` (CI runs
@@ -135,6 +136,23 @@ for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
 assert len(recs["f32"]) == len(recs["bf16"]) == 1
 assert recs["bf16"][0] * 2 == recs["f32"][0], recs
 print("PACKED-BF16-OK", recs)
+
+# gossip collectives honor average_dtype (PR 4): the permuted packed buffer
+# rides the wire in bf16, halving every large collective-permute; the (W,)
+# push-sum weight permutes stay fp32 scalars (filtered by BIG)
+cfg = slowmo.preset("sgp+slowmo", num_workers=W, tau=2)
+cps = {}
+for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
+    pcfg = dataclasses.replace(cfg, packed=True, average_dtype=avg)
+    spec = slowmo.make_state_pack_spec(pcfg, params0)
+    st = slowmo.init_slowmo(pcfg, jax.tree.map(jnp.array, params0), pack=spec)
+    fn = spmd.make_spmd_slowmo_round(pcfg, loss_fn, layout, pack=spec)
+    b = make_batches(0, pcfg.tau)
+    _, sizes = big_collectives(fn, st, b)
+    cps[key] = sorted(s for s in sizes["collective-permute"] if s > BIG)
+assert len(cps["f32"]) == len(cps["bf16"]) > 0, cps
+assert [2 * s for s in cps["bf16"]] == cps["f32"], cps
+print("GOSSIP-BF16-OK", cps)
 print("ALL-OK")
 """
 
@@ -172,3 +190,4 @@ def test_packed_mesh_gossip_ar_and_bf16():
     assert "ALL-OK" in proc.stdout
     assert proc.stdout.count("PACKED-SPMD-OK") == 2
     assert "PACKED-BF16-OK" in proc.stdout
+    assert "GOSSIP-BF16-OK" in proc.stdout

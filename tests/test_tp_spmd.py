@@ -1,0 +1,260 @@
+"""Tensor-parallel workers: the full (pod, data, model) mesh through the
+shard_map SlowMo round.
+
+Runs in a SUBPROCESS with 8 placeholder host-CPU devices.  Pins the
+acceptance criteria of the TP refactor on a (pods=2, data=2, model=2) mesh:
+
+* THREE-LEVEL EQUIVALENCE — a TP round (params model-sharded per
+  ``sharding.model_spec_tail``, loss running column-parallel-in /
+  row-parallel-out matmuls with psum over ``model`` via the backend's
+  model-axis hooks) must match the SAME ``models.tp.TPLoss`` run on the
+  (pods=2, data=2) TP-free mesh — where every hook is the identity — to
+  1e-6 (leaf-scaled) over 3 rounds, across {local, ar, sgp} x packed/tree
+  x bf16 ``average_dtype`` (bf16 gossip messages: 2-ulp bound, see
+  test_hierarchical_spmd);
+
+* THREE-LEVEL HLO STRUCTURE — per inner step exactly the loss's model-axis
+  psums grouped over ``model`` only plus ONE packed gradient all-reduce
+  grouped over ``data`` only; per round boundary exactly ONE packed
+  all-reduce grouped over ``pod`` only whose buffer is the LOCAL model
+  shard — half the bytes of the TP-free packing (traffic ∝ 1/TP); gossip
+  collective-permutes connect same-(data, model)-index devices across pods;
+
+* ONE RULE, BOTH PATHS — the dry-run spec rule (``slowmo_state_specs``) and
+  the mesh rule (``spmd_state_specs``) agree leaf-for-leaf on a TP state,
+  and batch specs replicate over ``model`` on both paths.
+"""
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import slowmo, packing
+from repro.distributed import spmd, sharding, hlo_analysis
+from repro.launch.mesh import make_hierarchical_layout
+from repro.models import tp as tp_lib
+
+assert len(jax.devices()) == 8
+PODS, DP, TP, B = 2, 2, 2, 4
+W = PODS
+
+tp_layout = make_hierarchical_layout(PODS, DP, TP)
+oracle_layout = make_hierarchical_layout(PODS, DP)
+assert tp_layout.model_shard == TP and tp_layout.num_workers == W
+
+# Megatron-style two-matmul loss: w_in column-parallel (sharded on its
+# output dim), w_down row-parallel (sharded on its contracting dim, psum),
+# b0/b replicated — b0 sits UPSTREAM of the column matmul, so its gradient
+# is only complete through copy_to_tp's psum backward (the f operator).
+def make_loss():
+    def factory(backend):
+        def loss_fn(params, batch):
+            h = tp_lib.copy_to_tp(backend, batch["x"] + params["b0"])
+            h = jnp.tanh(h @ params["w_in"])
+            pred = tp_lib.reduce_from_tp(backend, h @ params["w_down"]) + params["b"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+        return loss_fn
+    return tp_lib.TPLoss(factory)
+
+loss = make_loss()
+
+def make_batches(seed, tau, D, O):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (tau, W, B, D))
+    return {"x": x, "y": (jnp.sum(x, -1, keepdims=True) * 0.1) @ jnp.ones((1, O))}
+
+def make_params(D, H, O):
+    return {
+        "w_in": 0.3 * jax.random.normal(jax.random.PRNGKey(0), (D, H)),
+        "w_down": 0.3 * jax.random.normal(jax.random.PRNGKey(1), (H, O)),
+        "b0": jnp.zeros((D,)),
+        "b": jnp.zeros((O,)),
+    }
+
+D, H, O = 16, 32, 8
+params0 = make_params(D, H, O)
+dims = sharding.model_shard_dims(params0, TP)
+assert dims["w_in"] == 1 and dims["w_down"] == 0  # column in, row out
+assert dims["b0"] is None and dims["b"] is None
+
+# --- three-level equivalence: TP mesh vs TP-free (pod, data) mesh ----------
+CASES = [
+    ("local_sgd+slowmo", False, None),
+    ("local_sgd+slowmo", True, None),
+    ("local_sgd+slowmo", True, "bf16"),
+    ("ar_sgd", False, None),
+    ("ar_sgd", True, None),
+    ("sgp+slowmo", False, None),
+    ("sgp+slowmo", True, None),
+    ("sgp+slowmo", True, "bf16"),
+]
+for name, packed, avg in CASES:
+    cfg = dataclasses.replace(
+        slowmo.preset(name, num_workers=W, tau=3),
+        packed=packed,
+        average_dtype=jnp.bfloat16 if avg == "bf16" else None,
+    )
+    pack_tp = slowmo.make_state_pack_spec(cfg, params0, layout=tp_layout) if packed else None
+    pack_or = slowmo.make_state_pack_spec(cfg, params0) if packed else None
+    # fresh param copies per state: the mesh rounds DONATE their state
+    st_tp = slowmo.init_slowmo(cfg, jax.tree.map(jnp.array, params0), pack=pack_tp)
+    st_or = slowmo.init_slowmo(cfg, jax.tree.map(jnp.array, params0), pack=pack_or)
+    fn_tp = spmd.make_spmd_slowmo_round(cfg, loss, tp_layout, pack=pack_tp)
+    fn_or = spmd.make_spmd_slowmo_round(cfg, loss, oracle_layout, pack=pack_or)
+    for r in range(3):
+        b = make_batches(r, cfg.tau, D, O)
+        st_tp, met_tp = fn_tp(st_tp, b, 0.1)
+        st_or, met_or = fn_or(st_or, b, 0.1)
+    if packed:
+        st_tp = packing.unpack_state(pack_tp, st_tp)
+        st_or = packing.unpack_state(pack_or, st_or)
+    flat_tp, _ = jax.tree_util.tree_flatten_with_path(st_tp)
+    flat_or = jax.tree.leaves(st_or)
+    assert len(flat_tp) == len(flat_or)
+    # bf16 gossip messages are rounded every step: a tiny cross-compilation
+    # difference entering a near-tie cast flips one bf16 ulp (2^-15)
+    tol = 2 * 2.0**-15 if (avg == "bf16" and "sgp" in name) else 1e-6
+    for (path, a), m in zip(flat_tp, flat_or):
+        a, m = np.asarray(a, np.float32), np.asarray(m, np.float32)
+        scale = max(1.0, float(np.max(np.abs(m))) if m.size else 1.0)
+        np.testing.assert_allclose(
+            a / scale, m / scale, atol=tol, rtol=0,
+            err_msg=f"{name} packed={packed} avg={avg}: {jax.tree_util.keystr(path)}")
+    loss_tol = 1e-5 if tol == 1e-6 else 1e-3
+    assert abs(float(met_tp["loss"]) - float(met_or["loss"])) < loss_tol, (name, packed, avg)
+    print("TP-EQ-OK", name, f"packed={int(packed)}", f"avg={avg or 'f32'}")
+
+# --- three-level collective structure (packed, exact 1/TP bytes) -----------
+# leaf sizes chosen so shard rows are exactly half the TP-free rows (no
+# alignment slack): 128*512 + 512*128 = 128 rows full, 64 per shard
+DH, HH = 128, 512
+hlo_params = {
+    "w_in": 0.02 * jax.random.normal(jax.random.PRNGKey(2), (DH, HH)),
+    "w_down": 0.02 * jax.random.normal(jax.random.PRNGKey(3), (HH, DH)),
+}
+
+def hlo_loss_factory(backend):
+    def loss_fn(params, batch):
+        h = jnp.tanh(tp_lib.copy_to_tp(backend, batch["x"]) @ params["w_in"])
+        pred = tp_lib.reduce_from_tp(backend, h @ params["w_down"])
+        return jnp.mean((pred - batch["y"]) ** 2)
+    return loss_fn
+hlo_loss = tp_lib.TPLoss(hlo_loss_factory)
+
+MESH = tp_layout.mesh
+DATA_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("data",)))
+POD_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("pod",)))
+MODEL_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("model",)))
+SCALAR_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("pod", "data")))
+ALL_G = hlo_analysis.normalize_groups(
+    hlo_analysis.mesh_axis_groups(MESH, ("pod", "data", "model")))
+
+def lowered_ops(name, tau):
+    cfg = dataclasses.replace(
+        slowmo.preset(name, num_workers=W, tau=tau), packed=True, unroll_inner=True)
+    pk = slowmo.make_state_pack_spec(cfg, hlo_params, layout=tp_layout)
+    state = slowmo.init_slowmo(cfg, jax.tree.map(jnp.array, hlo_params), pack=pk)
+    b = make_batches(0, tau, DH, DH)
+    fn = spmd.make_spmd_slowmo_round(cfg, hlo_loss, tp_layout, pack=pk).build(state, b)
+    txt = hlo_analysis.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
+    return hlo_analysis.collective_ops(txt), pk
+
+TAU = 2
+ops, pk = lowered_ops("local_sgd+slowmo", TAU)
+shard_bytes = pk.shard.rows("float32") * packing.LANES * 4
+full_bytes = slowmo.make_state_pack_spec(
+    dataclasses.replace(slowmo.preset("local_sgd+slowmo", num_workers=W), packed=True),
+    hlo_params).rows("float32") * packing.LANES * 4
+assert 2 * shard_bytes == full_bytes, (shard_bytes, full_bytes)  # bytes ∝ 1/TP
+
+ars = [o for o in ops if o["op"] == "all-reduce"]
+by_groups = {}
+for o in ars:
+    g = o["replica_groups"]
+    # () is XLA's replica_groups={} form: all devices in one group
+    key = hlo_analysis.normalize_groups(g) if g else ALL_G
+    by_groups.setdefault(key, []).append(o)
+# per inner step ONE packed gradient all-reduce over 'data' only, moving the
+# LOCAL SHARD buffer
+data_ars = by_groups.get(DATA_G, [])
+assert len(data_ars) == TAU, (len(data_ars), TAU)
+assert all(o["bytes"] == shard_bytes for o in data_ars), data_ars
+# per boundary ONE packed all-reduce over 'pod' only, local shard buffer
+pod_ars = by_groups.get(POD_G, [])
+assert len(pod_ars) == 1 and pod_ars[0]["bytes"] == shard_bytes, pod_ars
+# the loss's model-axis psums: grouped over 'model' ONLY, activation-sized
+model_ars = by_groups.get(MODEL_G, [])
+assert len(model_ars) == TAU, model_ars  # one row-parallel psum per step
+assert all(o["bytes"] < shard_bytes for o in model_ars), model_ars
+# nothing else but the scalar loss pmean over (pod, data)
+other = {g: o for g, o in by_groups.items() if g not in (DATA_G, POD_G, MODEL_G)}
+assert set(other) == {SCALAR_G}, list(other)
+assert all(o["bytes"] == 4 for o in other[SCALAR_G]), other[SCALAR_G]
+print("TP-HLO-OK all-reduce groups: "
+      f"data x{len(data_ars)}, pod x{len(pod_ars)}, model x{len(model_ars)}, "
+      f"scalar x{len(other[SCALAR_G])}; boundary {shard_bytes} B = full/{TP}")
+
+# gossip permutes stay pod-level: pairs connect same-(data, model) devices
+ops_sgp, _ = lowered_ops("sgp+slowmo", TAU)
+cps = [o for o in ops_sgp if o["op"] == "collective-permute"]
+assert cps, "sgp TP round lowered without collective-permutes"
+ids = np.vectorize(lambda d: d.id)(MESH.devices)
+pod_pairs = {(int(ids[p, d, m]), int(ids[(p + 1) % PODS, d, m]))
+             for p in range(PODS) for d in range(DP) for m in range(TP)}
+for o in cps:
+    assert o["source_target_pairs"] is not None, o
+    assert set(o["source_target_pairs"]) <= pod_pairs, (o, pod_pairs)
+print("TP-CP-OK", len(cps), "collective-permutes, all pod-level")
+
+# --- one rule, both paths ---------------------------------------------------
+cfg_t = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2)
+state_shapes = jax.eval_shape(lambda: slowmo.init_slowmo(cfg_t, params0))
+dry = sharding.slowmo_state_specs(tp_layout, state_shapes)
+mesh_specs = sharding.spmd_state_specs(tp_layout, state_shapes, exact_average=True)
+for (pa, a), b in zip(jax.tree_util.tree_flatten_with_path(dry)[0],
+                      jax.tree.leaves(mesh_specs)):
+    assert a == b, (jax.tree_util.keystr(pa), a, b)
+# flatten order of the dict is sorted: b, b0, w_down, w_in
+pl = jax.tree.leaves(mesh_specs.params)
+assert pl[2] == P("pod", "model", None), pl  # w_down: row-parallel (dim 0)
+assert pl[3] == P("pod", None, "model"), pl  # w_in: column-parallel (dim 1)
+assert pl[0] == P("pod", None) and pl[1] == P("pod", None), pl  # biases replicated
+batch_shapes = {"x": jax.ShapeDtypeStruct((2, W, B, D), jnp.float32)}
+gspmd = sharding.batch_shardings(tp_layout, batch_shapes)
+mapped = sharding.spmd_batch_specs(tp_layout, batch_shapes)
+assert gspmd["x"].spec == mapped["x"] == P(None, "pod", "data")  # model-replicated
+print("TP-SPEC-UNIFY-OK")
+print("ALL-OK")
+"""
+
+
+def test_tp_matches_tp_free_oracle_and_hlo_pins():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        # JAX_PLATFORMS=cpu: without it the stripped env lets the bundled
+        # libtpu probe the GCP metadata server for ~8 min per subprocess
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout
+    assert proc.stdout.count("TP-EQ-OK") == 8
+    assert "TP-HLO-OK" in proc.stdout
+    assert "TP-CP-OK" in proc.stdout
+    assert "TP-SPEC-UNIFY-OK" in proc.stdout
