@@ -34,7 +34,9 @@ class ModelConfig:
     # norms / embeddings
     norm_type: str = "rmsnorm"  # 'rmsnorm' | 'nonparam_ln'
     tie_embeddings: bool = False
-    act: str = "swiglu"  # 'swiglu' | 'gelu'
+    act: str = "swiglu"  # 'swiglu' | 'gelu'; swiglu params are DE-FUSED
+    # (separate w_gate/w_up leaves, both column-parallel under TP — a fused
+    # gate+up matrix would interleave columns across model shards)
     # MoE
     n_experts: int = 0
     n_shared_experts: int = 0

@@ -77,16 +77,91 @@ def init_inner_state(cfg: InnerOptConfig, params: PyTree) -> InnerOptState:
     return InnerOptState(h=h, v=v, count=jnp.zeros((), jnp.int32))
 
 
-def _clip(cfg: InnerOptConfig, grads: PyTree) -> PyTree:
+def make_grad_sq_fn(backend=None, sharded_mask=None):
+    """Build ``sq_fn(tree) -> (W,)``: each worker's GLOBAL sum of squares
+    over the full (cross-model-shard) vector of every leaf.
+
+    ``sharded_mask`` says which parts of the state are model-sharded on this
+    backend:
+
+    * per-leaf tree layout — a pytree of python bools mirroring the tree
+      (True = the leaf is sliced along a ``sharding.model_spec_tail`` dim);
+    * packed flat-buffer layout — a ``packing.ShardRanges`` of static
+      per-group element ranges (``packing.ShardedPackSpec.sharded_ranges``),
+      since one shard buffer holds sharded slices AND full replicated copies
+      side by side; the replicated remainder is derived as
+      ``total - sharded`` so no buffer-sized mask is ever materialized.
+
+    Sharded contributions are distinct per model shard and get psummed over
+    ``model``; replicated contributions are identical on every shard and are
+    counted ONCE.  Without a mask (or without model axes) this is the plain
+    per-worker sum — the TP-free behavior.  Shared by the global-norm clip
+    (``_clip``) and the drift metric (``slowmo.make_slowmo_round``)."""
+
+    def leaf_sq(g):
+        gf = g.astype(jnp.float32)
+        return jnp.sum(jnp.square(gf), axis=tuple(range(1, gf.ndim)))
+
+    if sharded_mask is None or getattr(backend, "model_shards", 1) <= 1:
+        def sq_fn(tree):
+            return sum(leaf_sq(g) for g in jax.tree.leaves(tree))
+
+        return sq_fn
+
+    from . import packing
+
+    if isinstance(sharded_mask, packing.ShardRanges):  # packed buffers
+
+        def sq_fn(tree):
+            if not packing.is_packed(tree):
+                raise ValueError(
+                    "this sq_fn was built for packed buffers "
+                    "(got a non-Packed tree)"
+                )
+            sharded = jnp.zeros((), jnp.float32)
+            total = jnp.zeros((), jnp.float32)
+            for g in tree:
+                sq = jnp.square(tree[g].astype(jnp.float32))
+                sq = sq.reshape(sq.shape[:-2] + (-1,))  # (lead..., rows*LANES)
+                total = total + jnp.sum(sq, axis=tuple(range(1, sq.ndim)))
+                for off, size in sharded_mask.get(g, ()):
+                    seg = jax.lax.slice_in_dim(sq, off, off + size, axis=sq.ndim - 1)
+                    sharded = sharded + jnp.sum(seg, axis=tuple(range(1, seg.ndim)))
+            return backend.model_psum(sharded) + (total - sharded)
+
+        return sq_fn
+
+    mask_leaves = jax.tree.leaves(sharded_mask)
+
+    def sq_fn(tree):
+        g_leaves = jax.tree.leaves(tree)
+        if len(g_leaves) != len(mask_leaves):
+            raise ValueError(
+                f"sharded_mask has {len(mask_leaves)} leaves for a tree "
+                f"with {len(g_leaves)}"
+            )
+        sharded = jnp.zeros((), jnp.float32)
+        replicated = jnp.zeros((), jnp.float32)
+        for g, m in zip(g_leaves, mask_leaves):
+            if m:
+                sharded = sharded + leaf_sq(g)
+            else:
+                replicated = replicated + leaf_sq(g)
+        return backend.model_psum(sharded) + replicated
+
+    return sq_fn
+
+
+def _clip(cfg: InnerOptConfig, grads: PyTree, sq_fn=None) -> PyTree:
     """Per-worker global-norm clip: norms computed over the non-worker dims
     of every leaf jointly (axis 0 is the worker axis).  On packed state the
-    pad regions are zero, so they do not perturb the norm."""
+    pad regions are zero, so they do not perturb the norm.  ``sq_fn``
+    (``make_grad_sq_fn``) supplies the sum of squares; under tensor
+    parallelism it spans all model shards, so every shard derives the SAME
+    clip scale the TP-free worker would."""
     if not cfg.clip_norm:
         return grads
-    sq = sum(
-        jnp.sum(jnp.square(g), axis=tuple(range(1, g.ndim)))
-        for g in jax.tree.leaves(grads)
-    )  # (W,)
+    sq = (sq_fn or make_grad_sq_fn())(grads)  # (W,)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(jnp.sqrt(sq), 1e-9))
     return jax.tree.map(
         lambda g: g * scale.reshape((-1,) + (1,) * (g.ndim - 1)), grads
@@ -98,13 +173,16 @@ def update_direction(
     state: InnerOptState,
     params: PyTree,
     grads: PyTree,
+    sq_fn=None,
 ) -> tuple[PyTree, InnerOptState]:
     """Return the update direction ``d`` (Table C.1) and the new state.
 
     The caller applies ``x <- x - lr * d``.  Gradients and buffers are
-    accumulated in fp32 regardless of the parameter dtype.
+    accumulated in fp32 regardless of the parameter dtype.  ``sq_fn``
+    (``make_grad_sq_fn``) feeds the global-norm clip; required only for
+    tensor-parallel backends, where the norm must span model shards.
     """
-    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads), sq_fn)
     if cfg.weight_decay:
         grads = jax.tree.map(
             lambda g, p: g + cfg.weight_decay * p.astype(jnp.float32),
@@ -143,6 +221,7 @@ def apply_step(
     *,
     z: PyTree | None = None,
     use_pallas: bool = False,
+    sq_fn=None,
 ) -> tuple[PyTree, InnerOptState]:
     """One full base-optimizer step: ``params' = params - lr * d``.
 
@@ -152,11 +231,14 @@ def apply_step(
     momentum + look-ahead + parameter step through the fused kernel — one HBM
     pass and (on packed state) a single launch — instead of separate
     h-update / d / axpy passes.  Gradient clipping composes: it is applied to
-    ``grads`` before the kernel.
+    ``grads`` before the kernel, with ``sq_fn`` (``make_grad_sq_fn``)
+    supplying the TP-aware global norm on tensor-parallel backends.
     """
     fused = use_pallas and z is None and cfg.kind == "sgd" and cfg.nesterov
     if not fused:
-        d, state = update_direction(cfg, state, z if z is not None else params, grads)
+        d, state = update_direction(
+            cfg, state, z if z is not None else params, grads, sq_fn
+        )
         new_params = jax.tree.map(
             lambda x, dd: (x.astype(jnp.float32) - lr * dd).astype(x.dtype),
             params,
@@ -166,7 +248,7 @@ def apply_step(
 
     from ..kernels import ops as kops  # local import: kernels are optional
 
-    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+    grads = _clip(cfg, jax.tree.map(lambda g: g.astype(jnp.float32), grads), sq_fn)
     x_new, h_new = kops.fused_nesterov_update(
         params,
         state.h,

@@ -57,6 +57,21 @@ the same ``worker_mean`` call sees a single ``(W, rows, 1024)`` buffer per
 dtype group, so the exact average lowers to ONE all-reduce (and a gossip
 roll to one collective-permute) per boundary — ``average_dtype=bf16`` then
 halves the traffic of that one transfer instead of issuing N bf16 casts.
+
+Calling contract (who may call what, where):
+
+* ``AxisBackend`` methods run anywhere — they are plain array ops.
+* ``MeshBackend`` methods lower to named-axis collectives and are valid
+  ONLY inside the ``shard_map`` body that ``repro.distributed.spmd`` builds
+  over a mesh carrying the backend's axis names; calling them outside a
+  mapped region (or under a different mesh) is a trace-time error.
+* Losses never touch worker-axis primitives — they reach ONLY the model
+  hooks, and only via ``bind_loss``; the round body (``slowmo``/``gossip``/
+  ``base_opt``) owns everything else.
+* Leaf-aware cross-shard reductions (global-norm clip, drift) do not add
+  hooks here: they combine ``model_psum`` + ``worker_psum_scalar`` through
+  ``base_opt.make_grad_sq_fn`` with a sharded/replicated mask, so
+  replicated leaves are never double-counted across model shards.
 """
 from __future__ import annotations
 
@@ -105,8 +120,13 @@ class AxisBackend:
         already the mean over its whole batch — so this is the identity."""
         return tree
 
-    def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
-        """Sum over workers of a per-shard scalar."""
+    def worker_psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Sum over the WORKER axes only of an already model-complete scalar
+        (e.g. a drift sum whose sharded-leaf contributions were psummed over
+        ``model`` by ``base_opt.make_grad_sq_fn`` — never psum a per-device
+        scalar over worker AND model jointly: that would double-count
+        model-replicated contributions).  Identity on the oracle — sums over
+        the leading axis already cover every worker."""
         return x
 
     # -- model-axis hooks (tensor parallelism; identity on the oracle) ------
@@ -244,12 +264,13 @@ class MeshBackend:
             return tree
         return jax.tree.map(lambda g: jax.lax.pmean(g, self.batch_entry), tree)
 
-    def psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
-        # worker AND model axes: per-shard scalars (e.g. the drift's sum of
-        # squares) are partial over BOTH the worker shards and the model
-        # shards of every leaf, so the global total needs both.
-        entry = self.axis_names + self.model_axes
-        return jax.lax.psum(x, entry if len(entry) > 1 else entry[0])
+    def worker_psum_scalar(self, x: jnp.ndarray) -> jnp.ndarray:
+        # worker axes only: the summand must already be model-complete (and
+        # is replicated over the batch axes, which hold no distinct state).
+        # There is deliberately no worker+model joint psum in this API — it
+        # would count model-REPLICATED contributions once per shard; leaf-
+        # aware reductions go through ``base_opt.make_grad_sq_fn``.
+        return jax.lax.psum(x, self.axis_entry)
 
     # -- model-axis hooks (tensor parallelism) ------------------------------
     def model_psum(self, x: jnp.ndarray) -> jnp.ndarray:

@@ -257,12 +257,19 @@ class ShardedPackSpec:
     This object speaks the same interface as ``PackSpec`` (pack / unpack /
     zeros / scalars / rows / groups), but with GLOBAL semantics — ``pack``
     takes the full parameter tree, ``unpack`` returns it — so ``init_slowmo``,
-    checkpoints and the trainer use it as a drop-in ``pack``.
+    checkpoints and the trainer use it as a drop-in ``pack``.  Calling
+    contract: the GLOBAL methods here run OUTSIDE the mapped round only
+    (init / checkpoint / eval boundaries); INSIDE the shard_map body every
+    device carries one shard block and all pack/unpack goes through the
+    plain per-shard spec in ``.shard`` (``distributed.spmd`` passes exactly
+    that to ``make_slowmo_round``).
 
-    Caveat: replicated leaves appear once per shard block, so reductions
-    taken directly over a global buffer (e.g. a global gradient norm) would
-    count them ``num_shards`` times; the mesh path rejects ``clip_norm`` /
-    ``track_drift`` under TP for exactly this reason.
+    Caveat: replicated leaves appear once per shard block, so a reduction
+    taken blindly over a global buffer (e.g. a global gradient norm) would
+    count them ``num_shards`` times.  Leaf-aware reductions (``clip_norm``,
+    ``track_drift``) therefore split each buffer with ``sharded_ranges()`` —
+    psum the sharded slices over ``model``, count the replicated remainder
+    once (see ``base_opt.make_grad_sq_fn``).
     """
 
     shard: PackSpec  # layout of ONE model shard (the mapped body's spec)
@@ -392,6 +399,55 @@ class ShardedPackSpec:
 
     def scalars(self, dtype=jnp.float32) -> Packed:
         return self.shard.scalars(dtype)
+
+    # -- leaf-aware reductions (TP clip_norm / track_drift) -----------------
+    def sharded_ranges(self) -> "ShardRanges":
+        """Per-GROUP static ``(offset, size)`` element ranges of the
+        model-SHARDED slots in the per-shard buffer layout, adjacent ranges
+        coalesced.
+
+        One shard block holds shard ``s`` of every sharded leaf next to a
+        full copy of every replicated leaf, so a cross-shard reduction over
+        the local buffer must treat the two regions differently.  Ranges
+        (slices of the flattened buffer) make that split without
+        materializing a buffer-sized mask constant — the consumer
+        (``base_opt.make_grad_sq_fn``) sums the sharded slices and derives
+        the replicated remainder as ``total - sharded``."""
+        out = []
+        for g, _ in self.shard.group_rows:
+            ranges: list[list[int]] = []
+            for slot, dim in zip(self.shard.slots, self.shard_dims):
+                if slot.group != g or dim is None:
+                    continue
+                if ranges and ranges[-1][0] + ranges[-1][1] == slot.offset:
+                    ranges[-1][1] += slot.size
+                else:
+                    ranges.append([slot.offset, slot.size])
+            out.append((g, tuple((o, s) for o, s in ranges)))
+        return ShardRanges(by_group=tuple(out))
+
+    def tree_sharded_mask(self) -> PyTree:
+        """Bool-per-leaf mirror of the packed tree (True = model-sharded) —
+        the per-leaf-layout counterpart of ``sharded_ranges`` for round
+        phases that carry the unpacked tree (the local base's tree-carry
+        inner loop)."""
+        return jax.tree.unflatten(
+            self.shard.treedef, [d is not None for d in self.shard_dims]
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRanges:
+    """Static ``group -> ((offset, size), ...)`` index of the model-sharded
+    elements inside a per-shard packed buffer (``ShardedPackSpec.
+    sharded_ranges``).  A dedicated type — not a plain dict — so consumers
+    (``base_opt.make_grad_sq_fn``) can distinguish it from a dict-structured
+    per-leaf bool mask; hashable, so round builders can close over it."""
+
+    by_group: tuple  # ((group, ((offset, size), ...)), ...)
+
+    def get(self, group: str, default=()):
+        return dict(self.by_group).get(group, default)
 
 
 def make_sharded_pack_spec(tree: PyTree, shard_dims: PyTree, num_shards: int) -> ShardedPackSpec:

@@ -102,6 +102,22 @@ class SlowMoConfig:
         return not (self.beta == 0.0 and self.alpha == 1.0)
 
 
+class TPMasks(NamedTuple):
+    """Which parts of the state are model-sharded, for leaf-aware cross-shard
+    reductions (global-norm clip, drift) on tensor-parallel backends.
+
+    ``tree``: bool per params-tree leaf (True = sharded) — used whenever a
+    round phase carries the per-leaf layout.  ``packed``: a
+    ``packing.ShardRanges`` of static per-group element ranges of the
+    sharded slots in the per-shard buffer layout
+    (``packing.ShardedPackSpec.sharded_ranges``) — used on packed phases.
+    Built by ``repro.distributed.spmd.build_spmd_round``; irrelevant (None)
+    on TP-free backends."""
+
+    tree: Any = None
+    packed: Any = None
+
+
 class SlowMoState(NamedTuple):
     params: PyTree  # (W, ...) worker copies, param_dtype
     inner: InnerOptState  # base optimizer buffers, leading W
@@ -197,6 +213,7 @@ def make_inner_step(
     backend: comm.CommBackend | None = None,
     pack: PackSpec | None = None,
     grad_pack: PackSpec | None = None,
+    sq_fn=None,
 ):
     """Build one base-optimizer step over all W workers.
 
@@ -219,6 +236,11 @@ def make_inner_step(
     inner loop instead of re-unpacked every step — and packs ONLY the
     gradients around the batch-axis sync, so the per-step ``data``
     all-reduce still moves one flat buffer.
+
+    ``sq_fn`` (``base_opt.make_grad_sq_fn``) is the global sum-of-squares
+    the clip uses; on tensor-parallel backends it must match the layout the
+    gradients have AT apply_step time (packed vs tree) so the clip norm
+    spans every model shard without double-counting replicated leaves.
     """
     backend = backend or comm.AxisBackend(cfg.num_workers)
     loss_fn = comm.bind_loss(loss_fn, backend)
@@ -265,6 +287,7 @@ def make_inner_step(
             lr,
             z=z if gcfg.kind in ("sgp", "osgp") else None,
             use_pallas=cfg.use_pallas,
+            sq_fn=sq_fn,
         )
         params, gstate = gossip.mix(gcfg, gstate, params, step, backend)
         loss = backend.pmean_scalar(jnp.mean(losses))
@@ -355,6 +378,7 @@ def make_slowmo_round(
     backend: comm.CommBackend | None = None,
     pack: PackSpec | None = None,
     local_tree_inner: bool | None = None,
+    tp_masks: TPMasks | None = None,
 ):
     """Build the jittable round function.
 
@@ -387,6 +411,12 @@ def make_slowmo_round(
     automatic, i.e. tree-carry): ``False`` forces the legacy fully-packed
     inner loop — kept so ``bench_spmd_round.py`` can measure the
     amortization delta; numerics are identical either way.
+
+    ``tp_masks`` (required iff the backend has model shards AND clip_norm or
+    track_drift is on) carries the leaf-aware sharded/replicated split both
+    reductions need to span model shards correctly — built by
+    ``distributed.spmd.build_spmd_round`` from the same ``model_spec_tail``
+    rules that shard the state.
     """
     if cfg.packed and pack is None:
         raise ValueError("cfg.packed requires the PackSpec the state was built with")
@@ -401,8 +431,28 @@ def make_slowmo_round(
     if local_tree_inner is not None:
         tree_inner = tree_inner and local_tree_inner
     grad_pack = pack if (tree_inner and getattr(backend, "batch_axes", ())) else None
+    tp = getattr(backend, "model_shards", 1)
+    if tp > 1 and (cfg.inner.clip_norm or cfg.track_drift) and tp_masks is None:
+        raise ValueError(
+            "clip_norm / track_drift on a tensor-parallel backend need "
+            "TPMasks (which leaves are model-sharded) — the spmd round "
+            "builder derives them; direct callers must pass tp_masks"
+        )
+    tp_masks = tp_masks if tp > 1 else None
+    # the clip sees gradients in whatever layout the inner loop carries;
+    # drift sees the round-boundary state layout (packed iff cfg.packed)
+    inner_mask = drift_mask = None
+    if tp_masks is not None:
+        inner_mask = tp_masks.tree if (tree_inner or pack is None) else tp_masks.packed
+        drift_mask = tp_masks.packed if cfg.packed else tp_masks.tree
+    clip_sq_fn = base_opt.make_grad_sq_fn(backend, inner_mask)
     step_fn = make_inner_step(
-        cfg, loss_fn, backend, None if tree_inner else pack, grad_pack=grad_pack
+        cfg,
+        loss_fn,
+        backend,
+        None if tree_inner else pack,
+        grad_pack=grad_pack,
+        sq_fn=clip_sq_fn,
     )
 
     def round_fn(state: SlowMoState, batches: PyTree, lr):
@@ -458,19 +508,18 @@ def make_slowmo_round(
         )
         metrics = {"loss": loss_sum / cfg.tau}
         if cfg.track_drift:
+            # mean drift ||x^(i) - x_bar||^2: the per-worker sum of squares
+            # goes through the leaf-aware sq_fn so that on tensor-parallel
+            # backends sharded leaves psum over 'model' while replicated
+            # leaves count once; the worker sum is a psum over the worker
+            # axes only (the summand is already model-complete).
             mean_p = backend.worker_mean(state.params)
-            drift = sum(
-                jax.tree.leaves(
-                    jax.tree.map(
-                        lambda x, m: jnp.sum(
-                            jnp.square(x.astype(jnp.float32) - m[None])
-                        ),
-                        state.params,
-                        mean_p,
-                    )
-                )
+            diff = jax.tree.map(
+                lambda x, m: x.astype(jnp.float32) - m[None], state.params, mean_p
             )
-            metrics["drift"] = backend.psum_scalar(drift) / cfg.num_workers
+            per_worker = base_opt.make_grad_sq_fn(backend, drift_mask)(diff)
+            drift = backend.worker_psum_scalar(jnp.sum(per_worker))
+            metrics["drift"] = drift / cfg.num_workers
         state = outer_update(cfg, state, lr, backend)
         return state, metrics
 

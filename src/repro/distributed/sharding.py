@@ -10,10 +10,19 @@ layout's worker mesh axes.
 Sharding summary (Megatron-style within each worker):
 * embed: vocab over model        * lm/cls head: vocab over model
 * attn wq/wk/wv (+biases): head-out dim over model (column-parallel)
+* mlp w_gate/w_up (de-fused swiglu) / gelu wi / w_in: d_ff over model (column)
 * attn wo / mlp wo / w_down / w_out: contracting dim over model (row-parallel)
 * MoE expert wi/wo (L, E, d, f): EXPERT dim over model (expert parallelism)
-* router / norms / small gates: replicated
+* router / norms / small gates / feature_proj: replicated
 * recurrent widths (lru, conv, gates): channel dim over model
+
+``model_spec_tail`` is THE rule; everything else here is a consumer view of
+it: ``slowmo_state_specs`` (GSPMD dry-run), ``spmd_state_specs`` (specs for
+arrays ENTERING shard_map — all functions in this module run outside the
+mapped body), ``model_shard_dims`` (feeds ``packing.make_sharded_pack_spec``)
+and ``model_sharded_mask`` (feeds the leaf-aware TP clip/drift reductions).
+``tests/test_spec_rules.py`` pins that the dry-run and mesh views agree
+leaf-for-leaf on every preset.
 """
 from __future__ import annotations
 
@@ -156,6 +165,22 @@ def model_shard_dims(tree_shapes: PyTree, model_size: int) -> PyTree:
             if slot == "model":
                 return i
         return None
+
+    return jax.tree_util.tree_map_with_path(one, tree_shapes)
+
+
+def model_sharded_mask(tree_shapes: PyTree, model_size: int) -> PyTree:
+    """Bool-per-leaf mirror of ``tree_shapes``: True where the SAME
+    ``model_spec_tail`` rules shard the leaf over ``model``.  This is the
+    leaf-awareness input of the TP global-norm clip and drift metric
+    (``base_opt.make_grad_sq_fn``): sharded leaves' contributions psum over
+    ``model``, replicated leaves count once.  Leaves may carry extra leading
+    axes (the SlowMo worker axis) — rules match trailing dims."""
+
+    def one(path, leaf):
+        name, keys = _leaf_name(path)
+        tail = model_spec_tail(name, keys[:-1], leaf.shape, model_size)
+        return "model" in tail
 
     return jax.tree_util.tree_map_with_path(one, tree_shapes)
 

@@ -50,6 +50,12 @@ permutes) moves only the LOCAL model shard, so boundary traffic shrinks by
 1/TP.  Packed TP states use the shard-major ``packing.ShardedPackSpec``;
 equivalence with the TP-free round and the three-level collective structure
 are pinned by ``tests/test_tp_spmd.py``.
+
+Global-norm clipping and ``track_drift`` compose with TP: the round builder
+derives ``slowmo.TPMasks`` (which leaves are model-sharded) from the same
+rules that sharded the state, so both reductions psum sharded-leaf
+contributions over ``model`` and count replicated leaves exactly once —
+pinned against the TP-free mesh by ``tests/test_unified_tp.py``.
 """
 from __future__ import annotations
 
@@ -95,21 +101,6 @@ def _validate(cfg: SlowMoConfig, layout: WorkerLayout) -> int:
             "gossip bases need one worker per device on the mesh path "
             f"(num_workers={cfg.num_workers}, worker devices={n_dev})"
         )
-    if layout.model_shard > 1:
-        # TP composes with everything EXCEPT reductions that need the full
-        # (cross-shard) parameter vector on one device; fail eagerly with
-        # the reason instead of silently computing a per-shard quantity.
-        if cfg.inner.clip_norm:
-            raise ValueError(
-                "global-norm gradient clipping is not yet TP-aware: the "
-                "per-worker norm would miss the other model shards (and "
-                "count replicated leaves once per shard on packed state)"
-            )
-        if cfg.track_drift:
-            raise ValueError(
-                "track_drift is not yet TP-aware: the drift sum would count "
-                "replicated leaves once per model shard"
-            )
     return n_dev
 
 
@@ -209,8 +200,30 @@ def build_spmd_round(
         raise ValueError(
             "got a ShardedPackSpec but the layout has no model axes of size > 1"
         )
+    tp_masks = None
+    if backend.model_shards > 1 and (cfg.inner.clip_norm or cfg.track_drift):
+        # leaf-aware sharded/replicated split for the cross-shard global
+        # norm (clip) and drift: sharded contributions psum over 'model',
+        # replicated leaves count once.  Derived from the SAME rules that
+        # sharded the state (ShardedPackSpec.shard_dims on packed state,
+        # model_spec_tail on the per-leaf tree).
+        if pack is not None:
+            tp_masks = slowmo.TPMasks(
+                tree=pack.tree_sharded_mask(), packed=pack.sharded_ranges()
+            )
+        else:
+            tp_masks = slowmo.TPMasks(
+                tree=sharding.model_sharded_mask(
+                    state.params, backend.model_shards
+                )
+            )
     body = slowmo.make_slowmo_round(
-        cfg, loss_fn, backend, pack=body_pack, local_tree_inner=local_tree_inner
+        cfg,
+        loss_fn,
+        backend,
+        pack=body_pack,
+        local_tree_inner=local_tree_inner,
+        tp_masks=tp_masks,
     )
     state_specs = sharding.spmd_state_specs(
         layout, state, exact_average=cfg.exact_average

@@ -67,11 +67,13 @@ def main():
         default=1,
         help="tensor-parallel degree: every worker becomes a group of --tp "
         "devices along a 'model' mesh axis holding Megatron-style shards of "
-        "its parameters (column-parallel qkv/up, row-parallel out/down, "
+        "its parameters (column-parallel qkv/gate/up, row-parallel out/down, "
         "vocab-parallel embed/CE; activations psum over 'model' only), so "
         "hierarchical meshes are (--pods x --dp x --tp) and flat meshes "
-        "(--workers x --tp).  Needs --mesh host and a TP-capable arch "
-        "(dense family, act != swiglu — e.g. hubert-xlarge)",
+        "(--workers x --tp).  Needs --mesh host and a dense-family arch — "
+        "the whole text family qualifies, swiglu included (de-fused "
+        "w_gate/w_up), plus hubert-xlarge; MoE expert parallelism is a "
+        "ROADMAP item",
     )
     args = ap.parse_args()
 

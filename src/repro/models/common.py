@@ -264,13 +264,20 @@ def attn_out(cfg: ModelConfig, p, o):
 # ---------------------------------------------------------------------------
 
 def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None, layers: Optional[int] = None):
+    """SwiGLU MLPs carry SEPARATE ``w_gate`` / ``w_up`` projections (not a
+    fused ``wi``): under tensor parallelism both are column-parallel on d_ff,
+    and a fused (d, 2*d_ff) matrix would interleave gate and up columns
+    across model shards under the ``(None, 'model')`` rule.  Old fused
+    checkpoints are migrated on restore (``train.checkpoint``)."""
     d_ff = d_ff or cfg.d_ff
     d = cfg.d_model
     L = (layers,) if layers else ()
     k1, k2 = jax.random.split(key)
     if cfg.act == "swiglu":
+        kg, ku = jax.random.split(k1)
         return {
-            "wi": dense_init(k1, L + (d, 2 * d_ff)),  # fused gate+up
+            "w_gate": dense_init(kg, L + (d, d_ff)),
+            "w_up": dense_init(ku, L + (d, d_ff)),
             "wo": dense_init(k2, L + (d_ff, d)),
         }
     return {
@@ -281,11 +288,12 @@ def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None, layers: Optional
 
 def mlp(cfg: ModelConfig, p, x):
     dt = x.dtype
-    h = x @ p["wi"].astype(dt)
     if cfg.act == "swiglu":
-        gate, up = jnp.split(h, 2, axis=-1)
+        gate = x @ p["w_gate"].astype(dt)
+        up = x @ p["w_up"].astype(dt)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
     else:
+        h = x @ p["wi"].astype(dt)
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
     return h @ p["wo"].astype(dt)
 
@@ -293,6 +301,17 @@ def mlp(cfg: ModelConfig, p, x):
 # ---------------------------------------------------------------------------
 # losses
 # ---------------------------------------------------------------------------
+
+def masked_mean(values, mask=None):
+    """Mean of ``values`` over the positions ``mask`` marks (all of them when
+    ``mask`` is None).  THE loss-reduction tail, shared by ``softmax_xent``
+    and the vocab-parallel cross-entropy (``models.tp.vocab_parallel_xent``)
+    so the two cannot disagree on masked-CE semantics."""
+    if mask is None:
+        return jnp.mean(values)
+    maskf = mask.astype(jnp.float32)
+    return jnp.sum(values * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)
+
 
 def softmax_xent(logits, labels, mask=None):
     """Mean cross-entropy in fp32. logits (…, V), labels (…) int32.
@@ -304,11 +323,7 @@ def softmax_xent(logits, labels, mask=None):
     lse = jax.nn.logsumexp(logits, axis=-1)
     vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
     ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
-    nll = lse - ll
-    if mask is not None:
-        mask = mask.astype(jnp.float32)
-        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.mean(nll)
+    return masked_mean(lse - ll, mask)
 
 
 def next_token_loss(logits, tokens):

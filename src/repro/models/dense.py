@@ -5,6 +5,16 @@ only audio backbone with a stubbed conv-feature frontend).
 Layers are stacked with a leading L axis and executed with scan-over-layers
 (compact HLO; essential for the 61-layer dry-runs).  ``cfg.remat`` wraps the
 block in jax.checkpoint for training-memory control.
+
+THE one pipeline: every entry point takes an optional ``backend`` carrying
+the model-axis hooks of ``repro.core.comm`` (default: ``tp.IDENTITY``, under
+which every hook short-circuits to the identity and this file is a plain
+single-device transformer).  Bound to a mesh backend with model axes — via
+``tp.make_tp_loss`` — the SAME code runs Megatron-style on local parameter
+shards: activations enter column-parallel matmuls through ``tp.copy_to_tp``,
+leave row-parallel ones through ``tp.reduce_from_tp``, and the embedding /
+cross-entropy are vocab-parallel.  There is no separate TP forward to drift
+out of sync with this one.
 """
 from __future__ import annotations
 
@@ -15,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from . import common
+from . import common, tp
 
 PyTree = Any
 
@@ -44,19 +54,40 @@ def init_params(cfg: ModelConfig, key) -> PyTree:
     return params
 
 
-def _block(cfg: ModelConfig, x, positions, bp):
+def _local_cfg(cfg: ModelConfig, attn_params) -> ModelConfig:
+    """Per-shard view of the config: head counts scaled down to what the
+    LOCAL column-parallel qkv projections produce (read off the shard's
+    actual trailing dims, so the same code runs on full params too — there
+    the derived counts equal the config's own)."""
+    hd = cfg.resolved_head_dim
+    hq = attn_params["wq"].shape[-1] // hd
+    hkv = attn_params["wk"].shape[-1] // hd
+    # pin head_dim: with fewer local heads, the derived d_model // n_heads
+    # would no longer be the true per-head width
+    return cfg.replace(n_heads=hq, n_kv_heads=hkv, head_dim=hd)
+
+
+def _block(cfg: ModelConfig, backend, x, positions, bp):
+    """One transformer block.  With model shards: column-parallel qkv (heads
+    sharded), local attention on the shard's heads, row-parallel wo + psum;
+    column-parallel mlp gate/up, row-parallel mlp down + psum.  Norms and
+    the residual stream stay replicated.  With the identity hooks the
+    region operators vanish and this is the plain block."""
+    lcfg = _local_cfg(cfg, bp["attn"])
     h = common.apply_norm(cfg, x, bp.get("ln1"))
-    q, k, v = common.qkv_project(cfg, bp["attn"], h, positions)
-    o = common.attention(cfg, q, k, v)
-    x = x + common.attn_out(cfg, bp["attn"], o)
+    h = tp.copy_to_tp(backend, h)
+    q, k, v = common.qkv_project(lcfg, bp["attn"], h, positions)
+    o = common.attention(lcfg, q, k, v)
+    x = x + tp.reduce_from_tp(backend, common.attn_out(lcfg, bp["attn"], o))
     h = common.apply_norm(cfg, x, bp.get("ln2"))
-    x = x + common.mlp(cfg, bp["mlp"], h)
+    h = tp.copy_to_tp(backend, h)
+    x = x + tp.reduce_from_tp(backend, common.mlp(cfg, bp["mlp"], h))
     return x
 
 
-def backbone(cfg: ModelConfig, params, x, positions):
+def backbone(cfg: ModelConfig, params, x, positions, backend=tp.IDENTITY):
     """Run the stacked blocks over embeddings x (B, S, d)."""
-    block = functools.partial(_block, cfg)
+    block = functools.partial(_block, cfg, backend)
     if cfg.remat:
         block = jax.checkpoint(block, static_argnums=())
 
@@ -67,22 +98,35 @@ def backbone(cfg: ModelConfig, params, x, positions):
     return common.apply_norm(cfg, x, params.get("final_norm"))
 
 
-def forward(cfg: ModelConfig, params, batch, last_only: bool = False) -> jnp.ndarray:
+def forward(
+    cfg: ModelConfig, params, batch, last_only: bool = False, backend=tp.IDENTITY
+) -> jnp.ndarray:
     """Return logits (B, S, V); last_only => logits for the final position only
-    (prefill-style serving: avoids materializing the full-vocab logits)."""
+    (prefill-style serving: avoids materializing the full-vocab logits).
+
+    With a model-sharded ``backend`` the params are local shards and the
+    returned logits are vocab-sharded (B, S, V/TP) — ``loss_fn`` consumes
+    them through the vocab-parallel CE."""
     if cfg.modality == "audio":
         feats = batch["features"].astype(cfg.dtype)
+        # feature_proj is replicated by rule (its output is the residual
+        # stream) — plain matmul
         x = feats @ params["feature_proj"].astype(cfg.dtype)
         if "mask" in batch:
             m = batch["mask"][..., None].astype(cfg.dtype)
             x = x * (1 - m) + params["mask_embed"].astype(cfg.dtype) * m
     else:
-        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+        x = tp.vocab_parallel_embed(backend, params["embed"], batch["tokens"]).astype(
+            cfg.dtype
+        )
     B, S = x.shape[:2]
     positions = jnp.arange(S, dtype=jnp.int32)[None]
-    x = backbone(cfg, params, x, positions)
+    x = backbone(cfg, params, x, positions, backend=backend)
     if last_only:
         x = x[:, -1:]
+    # the head is column-parallel on vocab: psum the backward into the
+    # replicated final norm / residual stream
+    x = tp.copy_to_tp(backend, x)
     if cfg.modality == "audio":
         head = params["cls_head"]
     else:
@@ -90,12 +134,16 @@ def forward(cfg: ModelConfig, params, batch, last_only: bool = False) -> jnp.nda
     return x @ head.astype(x.dtype)
 
 
-def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
-    logits = forward(cfg, params, batch)
+def loss_fn(cfg: ModelConfig, params, batch, backend=tp.IDENTITY) -> jnp.ndarray:
+    logits = forward(cfg, params, batch, backend=backend)
     if cfg.modality == "audio":
         # HuBERT-style masked prediction: CE over cluster ids at masked frames.
-        return common.softmax_xent(logits, batch["labels"], batch["mask"])
-    return common.next_token_loss(logits, batch["tokens"])
+        return tp.vocab_parallel_xent(
+            backend, logits, batch["labels"], cfg.vocab_size, batch["mask"]
+        )
+    return tp.vocab_parallel_xent(
+        backend, logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab_size
+    )
 
 
 # ---------------------------------------------------------------------------

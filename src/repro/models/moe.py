@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from . import common, dense
+from . import common, dense, tp
 
 PyTree = Any
 
@@ -118,10 +118,12 @@ def init_params(cfg: ModelConfig, key) -> PyTree:
             "ln2": jnp.zeros((L_moe, d), jnp.float32),
         }
         if cfg.n_shared_experts:
+            # shared experts run through common.mlp -> de-fused swiglu layout
             fs = cfg.n_shared_experts * f
-            k1, k2 = jax.random.split(ks[4])
+            k1, k2, k3 = jax.random.split(ks[4], 3)
             p["shared"] = {
-                "wi": common.dense_init(k1, (L_moe, d, 2 * fs)),
+                "w_gate": common.dense_init(k1, (L_moe, d, fs)),
+                "w_up": common.dense_init(k3, (L_moe, d, fs)),
                 "wo": common.dense_init(k2, (L_moe, fs, d)),
             }
         return p
@@ -154,7 +156,7 @@ def _moe_block(cfg: ModelConfig, x, positions, bp):
 def backbone(cfg: ModelConfig, params, x, positions):
     if cfg.first_k_dense:
         dense_cfg = cfg.replace(d_ff=cfg.dense_d_ff or cfg.d_ff)
-        block = functools.partial(dense._block, dense_cfg)
+        block = functools.partial(dense._block, dense_cfg, tp.IDENTITY)
         if cfg.remat:
             block = jax.checkpoint(block)
 

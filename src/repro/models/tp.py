@@ -1,8 +1,14 @@
-"""Tensor-parallel (Megatron-style) losses for the mapped SlowMo round.
+"""Tensor-parallel primitives: region operators + vocab-parallel embed/CE.
+
+There is ONE transformer pipeline in this repo — ``models.dense`` — and it is
+TP-executable because it threads a pair of (identity-defaulting) model-axis
+hooks through every block.  This module provides exactly those primitives;
+the forward itself lives in ``dense.py`` (there is no mirrored TP forward to
+drift out of sync).
 
 Inside ``shard_map`` every parameter leaf arrives as its LOCAL model shard
-(sliced along the dim ``sharding.model_spec_tail`` marks), so the loss must
-run its matmuls shard-locally and deposit the reductions the math requires
+(sliced along the dim ``sharding.model_spec_tail`` marks), so the pipeline
+runs its matmuls shard-locally and deposits the reductions the math requires
 through the backend's model-axis hooks (``repro.core.comm``):
 
 * column-parallel matmul (weight sharded on the OUTPUT dim): forward is
@@ -13,24 +19,23 @@ through the backend's model-axis hooks (``repro.core.comm``):
   identity backward);
 * vocab-parallel embedding / cross-entropy: masked local lookup + psum, and
   a logsumexp assembled from per-shard max (pmax, under stop_gradient) and
-  per-shard exp-sums (psum).
+  per-shard exp-sums (psum); the masked-mean reduction tail is shared with
+  ``common.softmax_xent``.
 
 Both operators are explicit ``jax.custom_vjp``s, so gradient correctness
 never leans on collective transpose rules; gradients leave the loss already
 model-complete and the rest of the round (grad_mean over ``data``, the
 boundary all-reduce over ``pod``) operates on local shards unchanged.
 
-The entry point is ``TPLoss`` — a loss that knows it needs a backend.
-``make_slowmo_round`` binds it via the ``comm.bind_loss`` protocol: bound to
-a ``MeshBackend`` with model axes it executes real ``psum``s over ``model``;
-bound to the ``AxisBackend`` oracle (or a TP-free mesh) every hook is the
-identity and the SAME loss computes the unsharded math — which is what lets
-one loss serve as its own equivalence oracle in ``tests/test_tp_spmd.py``.
+On a backend WITHOUT model shards (``model_shards == 1`` — the array-axis
+oracle, a TP-free mesh, or the module-level ``IDENTITY`` hooks the pipeline
+defaults to) every operator short-circuits to the identity, so the same
+pipeline computes the unsharded math with byte-identical HLO — which is what
+lets one loss serve as its own equivalence oracle in ``tests/test_tp_spmd``.
 
-``make_tp_loss(cfg)`` builds the TP-aware dense-family loss.  Constraints
-(eagerly checked): dense family; ``act != 'swiglu'`` (the fused gate+up
-columns of ``wi`` interleave across model shards — de-fusing them is a
-param-layout change tracked on the ROADMAP); head counts divisible by TP.
+The entry point is ``TPLoss`` — a loss that knows it needs a backend.
+``make_slowmo_round`` binds it via the ``comm.bind_loss`` protocol, and
+``make_tp_loss(cfg)`` wires the dense-family pipeline into one.
 """
 from __future__ import annotations
 
@@ -45,12 +50,35 @@ from . import common
 PyTree = Any
 
 
+class _IdentityHooks:
+    """Model-axis hooks of a TP-free execution: every reduction is complete
+    already.  The default ``backend`` of the dense pipeline, so plain
+    ``loss_fn(params, batch)`` / ``forward`` calls need no backend at all."""
+
+    model_shards = 1
+
+    @staticmethod
+    def model_psum(x):
+        return x
+
+    @staticmethod
+    def model_pmax(x):
+        return x
+
+    @staticmethod
+    def model_index():
+        return 0
+
+
+IDENTITY = _IdentityHooks()
+
+
 class TPLoss:
     """Backend-bindable loss: ``factory(backend) -> loss_fn(params, batch)``.
 
     ``make_inner_step`` binds it to the round's CommBackend through
-    ``comm.bind_loss``; calling it unbound runs the oracle (identity-hook)
-    semantics so it also works as a plain loss on full parameters.
+    ``comm.bind_loss``; calling it unbound runs the identity-hook semantics,
+    so it also works as a plain loss on full parameters.
     """
 
     def __init__(self, factory: Callable):
@@ -60,9 +88,7 @@ class TPLoss:
         return self._factory(backend)
 
     def __call__(self, params, batch):
-        from ..core import comm  # lazy: models must stay importable alone
-
-        return self._factory(comm.AxisBackend(1))(params, batch)
+        return self._factory(IDENTITY)(params, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +101,10 @@ def copy_to_tp(backend, x):
     Wrap every REPLICATED activation that feeds a column-parallel matmul —
     each shard's backward contribution covers only its own output columns,
     so the input cotangent must be psummed over ``model`` for upstream
-    (replicated) parameters to receive complete gradients."""
+    (replicated) parameters to receive complete gradients.  Identity (no
+    custom_vjp wrapping at all) when the backend has no model shards."""
+    if backend.model_shards == 1:
+        return x
 
     @jax.custom_vjp
     def f(x):
@@ -90,7 +119,10 @@ def reduce_from_tp(backend, x):
 
     Wrap every row-parallel matmul output (a partial sum over the sharded
     contracting dim); the output cotangent is already replicated, so the
-    backward is the identity."""
+    backward is the identity.  Identity when the backend has no model
+    shards."""
+    if backend.model_shards == 1:
+        return x
 
     @jax.custom_vjp
     def f(x):
@@ -124,9 +156,10 @@ def vocab_parallel_xent(backend, logits, labels, vocab_size, mask=None):
     The logsumexp is assembled from the per-shard max (pmax, under
     stop_gradient — gradients flow through the exp-sums, as in
     ``jax.nn.logsumexp``) and the psum of per-shard exp-sums; the label
-    logit is a masked local select + psum.  Falls back to the plain
-    ``common.softmax_xent`` when the logits carry the full vocab (TP-free
-    backend, or a head the divisibility guard left replicated)."""
+    logit is a masked local select + psum; the reduction tail is
+    ``common.masked_mean``, shared with the plain CE.  Falls back to
+    ``common.softmax_xent`` entirely when the logits carry the full vocab
+    (TP-free backend, or a head the divisibility guard left replicated)."""
     if logits.shape[-1] == vocab_size:
         return common.softmax_xent(logits, labels, mask)
     lf = logits.astype(jnp.float32)
@@ -153,104 +186,31 @@ def vocab_parallel_xent(backend, logits, labels, vocab_size, mask=None):
         backend,
         jnp.sum(jnp.where(vocab_iota == local_lab[..., None], lf, 0.0), axis=-1),
     )
-    nll = lse - ll
-    if mask is not None:
-        maskf = mask.astype(jnp.float32)
-        return jnp.sum(nll * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)
-    return jnp.mean(nll)
+    return common.masked_mean(lse - ll, mask)
 
 
 # ---------------------------------------------------------------------------
-# dense-family TP loss
+# wiring: the dense pipeline as a backend-bindable loss
 # ---------------------------------------------------------------------------
-
-def _local_cfg(cfg: ModelConfig, attn_params) -> ModelConfig:
-    """Per-shard view of the config: head counts scaled down to what the
-    LOCAL column-parallel qkv projections produce (read off the shard's
-    actual trailing dims, so the same code runs on full params too)."""
-    hd = cfg.resolved_head_dim
-    hq = attn_params["wq"].shape[-1] // hd
-    hkv = attn_params["wk"].shape[-1] // hd
-    # pin head_dim: with fewer local heads, the derived d_model // n_heads
-    # would no longer be the true per-head width
-    return cfg.replace(n_heads=hq, n_kv_heads=hkv, head_dim=hd)
-
-
-def _tp_block(cfg: ModelConfig, backend, x, positions, bp):
-    """One transformer block, Megatron-parallel: column-parallel qkv (heads
-    sharded), local attention on the shard's heads, row-parallel wo + psum;
-    column-parallel mlp up, row-parallel mlp down + psum.  Norms and the
-    residual stream stay replicated."""
-    lcfg = _local_cfg(cfg, bp["attn"])
-    h = common.apply_norm(cfg, x, bp.get("ln1"))
-    h = copy_to_tp(backend, h)
-    q, k, v = common.qkv_project(lcfg, bp["attn"], h, positions)
-    o = common.attention(lcfg, q, k, v)
-    x = x + reduce_from_tp(backend, common.attn_out(lcfg, bp["attn"], o))
-    h = common.apply_norm(cfg, x, bp.get("ln2"))
-    h = copy_to_tp(backend, h)
-    x = x + reduce_from_tp(backend, common.mlp(cfg, bp["mlp"], h))
-    return x
-
-
-def _dense_tp_loss(cfg: ModelConfig, backend, params, batch) -> jnp.ndarray:
-    import functools
-
-    if cfg.modality == "audio":
-        feats = batch["features"].astype(cfg.dtype)
-        # feature_proj is replicated by rule (its output is the residual
-        # stream) — plain matmul
-        x = feats @ params["feature_proj"].astype(cfg.dtype)
-        if "mask" in batch:
-            m = batch["mask"][..., None].astype(cfg.dtype)
-            x = x * (1 - m) + params["mask_embed"].astype(cfg.dtype) * m
-    else:
-        x = vocab_parallel_embed(backend, params["embed"], batch["tokens"]).astype(
-            cfg.dtype
-        )
-    B, S = x.shape[:2]
-    positions = jnp.arange(S, dtype=jnp.int32)[None]
-
-    block = functools.partial(_tp_block, cfg, backend)
-    if cfg.remat:
-        block = jax.checkpoint(block, static_argnums=())
-
-    def body(carry, bp):
-        return block(carry, positions, bp), None
-
-    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
-    x = common.apply_norm(cfg, x, params.get("final_norm"))
-    # the head is column-parallel on vocab: psum the backward into the
-    # replicated final norm / residual stream
-    x = copy_to_tp(backend, x)
-    if cfg.modality == "audio":
-        head = params["cls_head"]
-        logits = x @ head.astype(x.dtype)
-        return vocab_parallel_xent(
-            backend, logits, batch["labels"], cfg.vocab_size, batch["mask"]
-        )
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = x @ head.astype(x.dtype)
-    return vocab_parallel_xent(
-        backend, logits[:, :-1], batch["tokens"][:, 1:], cfg.vocab_size
-    )
-
 
 def make_tp_loss(cfg: ModelConfig) -> TPLoss:
-    """TP-aware training loss for ``cfg``; numerically the bundle's
-    ``loss_fn`` when bound to a backend without model axes."""
+    """The dense pipeline (``dense.loss_fn``) as a backend-bindable loss.
+
+    Bound to a backend with model axes it runs Megatron-style on local
+    shards; bound to anything else it is numerically (and in HLO) the
+    bundle's plain ``loss_fn`` — the SAME code path either way, so there is
+    no mirror to drift.  The whole dense text family qualifies, swiglu
+    included (its de-fused ``w_gate``/``w_up`` are plain column-parallel
+    leaves).  MoE expert parallelism in the mapped loss is still a ROADMAP
+    item."""
     if cfg.family != "dense":
         raise NotImplementedError(
             f"tensor-parallel loss only implemented for the dense family "
             f"(got {cfg.family!r}); MoE expert parallelism is a ROADMAP item"
         )
-    if cfg.act == "swiglu":
-        raise NotImplementedError(
-            "swiglu's fused gate+up wi columns interleave across model "
-            "shards under the (None, 'model') rule; de-fusing wi into "
-            "w_gate/w_up is the param-layout change tracked on the ROADMAP "
-            "(hubert-xlarge, act='gelu', runs today)"
-        )
+
+    from . import dense  # lazy: dense imports this module's primitives
+
     def factory(backend):
         tp = backend.model_shards
         if tp > 1:
@@ -273,7 +233,7 @@ def make_tp_loss(cfg: ModelConfig) -> TPLoss:
                 )
 
         def loss_fn(params, batch):
-            return _dense_tp_loss(cfg, backend, params, batch)
+            return dense.loss_fn(cfg, params, batch, backend=backend)
 
         return loss_fn
 

@@ -213,8 +213,10 @@ def init_slstm_block(cfg: ModelConfig, key, layers=None):
             axis=-1,
         ).astype(jnp.float32),
         "ln_ffn": jnp.zeros(L + (d,), jnp.float32),
+        # swiglu FFN through common.mlp -> de-fused w_gate/w_up layout
         "ffn": {
-            "wi": common.dense_init(ks[2], L + (d, 2 * ffn_dim)),
+            "w_gate": common.dense_init(ks[2], L + (d, ffn_dim)),
+            "w_up": common.dense_init(jax.random.fold_in(ks[2], 1), L + (d, ffn_dim)),
             "wo": common.dense_init(ks[3], L + (ffn_dim, d)),
         },
     }

@@ -5,7 +5,14 @@ tree structure from the saved treedef repr + flat arrays.
 Checkpoints are ALWAYS written in the tree (per-leaf) layout: packed
 flat-buffer states (``repro.core.packing``) are unpacked on save and
 re-packed on restore (``save_state`` / ``restore_state``), so a snapshot
-taken by a packed run resumes in a per-leaf run and vice versa."""
+taken by a packed run resumes in a per-leaf run and vice versa.
+
+Layout migrations: snapshots written before the swiglu de-fuse carry a
+FUSED gate+up projection (an ``{'wi', 'wo'}`` mlp node whose ``wi`` packs
+gate and up side by side); ``restore(..., like=)`` detects the structure
+mismatch against the template and splits such nodes into the current
+``{'w_gate', 'w_up', 'wo'}`` layout (``migrate_fused_swiglu``) before
+validating, so old checkpoints keep restoring bit-for-bit."""
 from __future__ import annotations
 
 import json
@@ -19,6 +26,45 @@ import numpy as np
 from ..core import packing
 
 PyTree = Any
+
+
+def migrate_fused_swiglu(tree: PyTree, like: PyTree) -> PyTree:
+    """Split pre-de-fuse fused swiglu mlp nodes to the current layout.
+
+    Walks ``tree`` against the template ``like``: wherever the template has
+    a ``{'w_gate', 'w_up', 'wo'}`` dict and the checkpoint a ``{'wi', 'wo'}``
+    one, ``wi``'s trailing dim is split at the template's ``w_gate`` width
+    (gate first, then up — the fused packing order of the old
+    ``common.init_mlp``).  Scalar placeholder leaves (the SGD second-moment
+    slots mirror the params structure with () zeros) are duplicated instead
+    of split.  Everything else passes through untouched; non-swiglu
+    ``{'wi', 'wo'}`` mlps match the template already and are never visited
+    as a mismatch."""
+
+    def walk(node, ref):
+        if isinstance(node, dict) and isinstance(ref, dict):
+            if set(node) == {"wi", "wo"} and set(ref) == {"w_gate", "w_up", "wo"}:
+                wi = node["wi"]
+                if np.ndim(wi) == 0:
+                    return {"w_gate": wi, "w_up": np.copy(wi), "wo": node["wo"]}
+                split = np.shape(ref["w_gate"])[-1]
+                return {
+                    "w_gate": wi[..., :split],
+                    "w_up": wi[..., split:],
+                    "wo": node["wo"],
+                }
+            return {k: walk(v, ref.get(k)) for k, v in node.items()}
+        if hasattr(node, "_fields") and type(node) is type(ref):
+            return type(node)(*(walk(v, r) for v, r in zip(node, ref)))
+        if (
+            isinstance(node, (list, tuple))
+            and isinstance(ref, (list, tuple))
+            and len(node) == len(ref)
+        ):
+            return type(node)(walk(v, r) for v, r in zip(node, ref))
+        return node
+
+    return walk(tree, like)
 
 
 def save(path: str, tree: PyTree, step: int | None = None) -> None:
@@ -49,6 +95,11 @@ def restore(path: str, like: PyTree | None = None) -> tuple[PyTree, dict]:
     tree = jax.tree.unflatten(treedef, leaves)
     if like is not None:
         ref_leaves, ref_def = jax.tree.flatten(like)
+        if ref_def != treedef:
+            # layout migration: pre-de-fuse checkpoints carry fused swiglu
+            # {'wi','wo'} mlp nodes where the template has w_gate/w_up
+            tree = migrate_fused_swiglu(tree, like)
+            leaves, treedef = jax.tree.flatten(tree)
         if ref_def != treedef:
             raise ValueError(
                 f"checkpoint tree structure mismatch:\n got {treedef}\n want {ref_def}"

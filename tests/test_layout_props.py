@@ -165,21 +165,36 @@ class TestSpmdValidate:
         lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
         assert spmd._validate(self.cfg(), lay) == 2
 
-    def test_tp_rejects_clip_norm(self):
+    def test_tp_accepts_clip_norm_and_track_drift(self):
+        """PR 5: clip/drift are TP-aware (leaf-aware cross-shard norms) —
+        the eager rejections are gone; equivalence with the TP-free mesh is
+        pinned by tests/test_unified_tp.py."""
         from repro.core.base_opt import InnerOptConfig
 
         lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
         cfg = SlowMoConfig(
+            num_workers=2, tau=2, inner=InnerOptConfig(clip_norm=1.0),
+            track_drift=True,
+        )
+        assert spmd._validate(cfg, lay) == 2
+
+    def test_round_builder_requires_masks_for_tp_clip(self):
+        """Direct make_slowmo_round callers on a model-sharded backend must
+        supply TPMasks — a per-shard norm would be silently wrong."""
+        from repro.core import slowmo as slowmo_lib
+        from repro.core.base_opt import InnerOptConfig
+
+        class FakeTPBackend:
+            model_shards = 2
+            batch_axes = ()
+
+        cfg = SlowMoConfig(
             num_workers=2, tau=2, inner=InnerOptConfig(clip_norm=1.0)
         )
-        with pytest.raises(ValueError, match="clip"):
-            spmd._validate(cfg, lay)
-
-    def test_tp_rejects_track_drift(self):
-        lay = make_layout(hier_mesh(2, 2, model=2), "hierarchical")
-        cfg = SlowMoConfig(num_workers=2, tau=2, track_drift=True)
-        with pytest.raises(ValueError, match="track_drift"):
-            spmd._validate(cfg, lay)
+        with pytest.raises(ValueError, match="TPMasks"):
+            slowmo_lib.make_slowmo_round(
+                cfg, lambda p, b: 0.0, FakeTPBackend()
+            )
 
     def test_tp_rejects_plain_loss(self):
         """A non-backend-aware loss on a TP layout would silently consume

@@ -1,0 +1,316 @@
+"""The unified transformer pipeline under tensor parallelism (fast suite).
+
+With PR 5 there is ONE dense forward — ``models.dense`` threaded with the
+identity-defaulting model-axis hooks — so these tests pin the acceptance
+criteria directly on that pipeline instead of on a hand-maintained TP mirror
+(the old ``_dense_tp_loss``, whose drift was only caught by a slow-marked
+test on main pushes):
+
+* SWIGLU UNDER TP — a tiny swiglu text preset (tied vocab-parallel
+  embedding/head, de-fused ``w_gate``/``w_up`` column-parallel leaves) run
+  on a (data=2, model=2) mesh matches the TP-free 2-worker mesh running the
+  SAME ``make_tp_loss`` loss to 2e-6 (leaf-scaled — two separate XLA
+  compilations of a real model flip the odd last ulp); the packed layout is
+  covered by the packed clip/drift case below.  An audio twin (replicated
+  feature_proj, vocab-parallel cls_head) pins the MASKED branch of
+  ``vocab_parallel_xent`` on sharded logits — the hubert-style path;
+
+* TP-AWARE CLIP + DRIFT — ``clip_norm`` and ``track_drift`` (both eagerly
+  rejected under TP before this PR) produce the TP-free state and drift
+  metric exactly: sharded-leaf contributions psum over ``model``, replicated
+  leaves count once, on the per-leaf tree AND on shard-major packed buffers
+  (where replicated leaves appear once per shard block).  A no-clip control
+  run diverges from the clipped one, proving the clip binds;
+
+* FUSED-CHECKPOINT MIGRATION — a pre-de-fuse snapshot (fused gate+up ``wi``)
+  restores against the current template via ``migrate_fused_swiglu`` and is
+  numerically identical to hand-splitting the fused matrix.
+
+The mesh cases run in a SUBPROCESS with 8 placeholder host-CPU devices
+(conftest must keep the main process on the single real device).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import slowmo, packing
+from repro.core.base_opt import InnerOptConfig
+from repro.distributed import spmd
+from repro.launch.mesh import make_spmd_layout
+from repro.models import build_model, make_batch
+from repro.models import tp as tp_lib
+
+W, TP, B, S = 2, 2, 4, 16
+tp_layout = make_spmd_layout(W, TP)
+or_layout = make_spmd_layout(W)
+
+CFG = ModelConfig(
+    name="tiny-swiglu", family="dense", n_layers=2, d_model=32,
+    n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+    tie_embeddings=True, act="swiglu",
+)
+# audio twin (hubert-shaped): replicated feature_proj front-end,
+# vocab-parallel cls_head with MASKED cross-entropy, encoder attention —
+# the masked branch of vocab_parallel_xent only runs on sharded logits
+CFG_AUDIO = ModelConfig(
+    name="tiny-audio", family="dense", modality="audio", n_layers=2,
+    d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=32,
+    act="gelu", causal=False, frontend_dim=16,
+)
+
+
+def model_batches(cfg, seed, tau):
+    one = [
+        make_batch(cfg, jax.random.fold_in(jax.random.PRNGKey(seed), t * W + w), B, S)
+        for t in range(tau) for w in range(W)
+    ]
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape((tau, W) + xs[0].shape), *one
+    )
+
+
+def run_rounds(cfg, smcfg, layout, packed, rounds=2, lr=0.05):
+    params0 = build_model(cfg).init(jax.random.PRNGKey(0))
+    loss = tp_lib.make_tp_loss(cfg)
+    pack = (
+        slowmo.make_state_pack_spec(smcfg, params0, layout=layout)
+        if packed else None
+    )
+    st = slowmo.init_slowmo(smcfg, jax.tree.map(jnp.array, params0), pack=pack)
+    fn = spmd.make_spmd_slowmo_round(smcfg, loss, layout, pack=pack)
+    met = None
+    for r in range(rounds):
+        st, met = fn(st, model_batches(cfg, r, smcfg.tau), lr)
+    if packed:
+        st = packing.unpack_state(pack, st)
+    return st, met
+
+
+def assert_state_close(tag, st_tp, st_or, atol=2e-6):
+    # 2e-6 (not 1e-6): the two sides are separate XLA compilations of a real
+    # model — reassociated reductions flip the odd last ulp (leaf-scaled)
+    flat_tp, _ = jax.tree_util.tree_flatten_with_path(st_tp)
+    flat_or = jax.tree.leaves(st_or)
+    assert len(flat_tp) == len(flat_or)
+    for (path, a), m in zip(flat_tp, flat_or):
+        a, m = np.asarray(a, np.float32), np.asarray(m, np.float32)
+        scale = max(1.0, float(np.max(np.abs(m))) if m.size else 1.0)
+        np.testing.assert_allclose(
+            a / scale, m / scale, atol=atol, rtol=0,
+            err_msg=f"{tag}: {jax.tree_util.keystr(path)}")
+
+
+# --- swiglu text model under TP == the same loss on the TP-free mesh -------
+# (tree layout; the packed pipeline is covered — more strictly — by the
+# packed clip/drift case below, keeping the subprocess at 8 mesh compiles)
+smcfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2)
+st_noclip_tp, met_tp = run_rounds(CFG, smcfg, tp_layout, False)
+st_or, met_or = run_rounds(CFG, smcfg, or_layout, False)
+assert_state_close("swiglu tree", st_noclip_tp, st_or)
+assert abs(float(met_tp["loss"]) - float(met_or["loss"])) < 1e-5
+print("SWIGLU-TP-OK")
+
+# --- audio model: masked vocab-parallel CE on sharded cls_head logits ------
+st_tp, met_tp = run_rounds(CFG_AUDIO, smcfg, tp_layout, False)
+st_or, met_or = run_rounds(CFG_AUDIO, smcfg, or_layout, False)
+assert_state_close("audio masked-ce tree", st_tp, st_or)
+assert abs(float(met_tp["loss"]) - float(met_or["loss"])) < 1e-5
+print("AUDIO-MASKED-CE-TP-OK")
+
+# --- clip_norm + track_drift under TP == flat-mesh clip/drift --------------
+# clip_norm small enough to BIND every step on a fresh model; the no-clip
+# control below proves it does.  The clip/drift path is base-agnostic
+# (apply_step / round boundary), so the local base covers every preset; the
+# packed case exercises the ShardedPackSpec element masks, the tree case
+# the per-leaf bool masks (the local base's tree-carry inner loop).
+st_clip_tp = None
+for packed in (False, True):
+    smcfg = dataclasses.replace(
+        slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2),
+        packed=packed,
+        inner=InnerOptConfig(clip_norm=0.05),
+        track_drift=True,
+    )
+    st_tp, met_tp = run_rounds(CFG, smcfg, tp_layout, packed)
+    st_or, met_or = run_rounds(CFG, smcfg, or_layout, packed)
+    assert_state_close(f"clip packed={packed}", st_tp, st_or)
+    assert np.isfinite(float(met_tp["drift"]))
+    d_tp, d_or = float(met_tp["drift"]), float(met_or["drift"])
+    assert abs(d_tp - d_or) <= 1e-6 * max(1.0, abs(d_or)), (packed, d_tp, d_or)
+    if not packed:
+        st_clip_tp = st_tp
+    print("TP-CLIP-DRIFT-OK", f"packed={int(packed)}")
+
+# no-clip control: the clipped TP run must differ from the unclipped one
+# above (same preset/batches/lr — otherwise the 'equivalence' would also
+# pass with a dead clip path); reuses the two tree-layout TP states.
+diffs = [
+    float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+    for a, b in zip(
+        jax.tree.leaves(st_noclip_tp.params), jax.tree.leaves(st_clip_tp.params)
+    )
+]
+assert max(diffs) > 1e-4, f"clip_norm=0.05 never bound (max param delta {max(diffs)})"
+print("TP-CLIP-BINDS-OK")
+print("ALL-OK")
+"""
+
+
+def test_unified_pipeline_tp_equivalence_and_clip_drift():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        # JAX_PLATFORMS=cpu: without it the stripped env lets the bundled
+        # libtpu probe the GCP metadata server for ~8 min per subprocess
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout
+    assert "SWIGLU-TP-OK" in proc.stdout
+    assert "AUDIO-MASKED-CE-TP-OK" in proc.stdout
+    assert proc.stdout.count("TP-CLIP-DRIFT-OK") == 2
+    assert "TP-CLIP-BINDS-OK" in proc.stdout
+
+
+class TestFusedSwigluMigration:
+    """Pre-de-fuse checkpoints (fused gate+up ``wi``) must keep restoring."""
+
+    def _fuse(self, tree):
+        """Re-create the OLD on-disk layout: concatenate w_gate|w_up -> wi."""
+
+        def walk(node):
+            if isinstance(node, dict):
+                node = {k: walk(v) for k, v in node.items()}
+                if set(node) == {"w_gate", "w_up", "wo"}:
+                    g, u = node["w_gate"], node["w_up"]
+                    wi = (
+                        g
+                        if np.ndim(g) == 0
+                        else np.concatenate([np.asarray(g), np.asarray(u)], axis=-1)
+                    )
+                    return {"wi": wi, "wo": node["wo"]}
+            if hasattr(node, "_fields"):
+                return type(node)(*(walk(v) for v in node))
+            if isinstance(node, (list, tuple)):
+                return type(node)(walk(v) for v in node)
+            return node
+
+        return walk(tree)
+
+    def test_fused_state_restores_against_defused_template(self, tmp_path):
+        from repro.configs import get_config
+        from repro.core import slowmo
+        from repro.models import build_model
+        from repro.train import checkpoint as ckpt
+
+        cfg = get_config("olmo-1b", reduced=True)  # swiglu, tied embeddings
+        model = build_model(cfg)
+        smcfg = slowmo.SlowMoConfig(num_workers=2, tau=2)
+        state = slowmo.init_slowmo(smcfg, model.init(jax.random.PRNGKey(0)))
+        state = jax.tree.map(np.asarray, state)
+
+        old = self._fuse(state)
+        # sanity: the fused tree is a genuinely different structure
+        assert jax.tree.structure(old) != jax.tree.structure(state)
+        path = str(tmp_path / "old_ckpt")
+        ckpt.save(path, old, step=3)
+
+        restored, meta = ckpt.restore(path, like=state)
+        assert meta["step"] == 3
+        assert jax.tree.structure(restored) == jax.tree.structure(state)
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_nonswiglu_checkpoints_untouched(self, tmp_path):
+        from repro.configs import get_config
+        from repro.core import slowmo
+        from repro.models import build_model
+        from repro.train import checkpoint as ckpt
+
+        cfg = get_config("hubert-xlarge", reduced=True)  # act='gelu'
+        model = build_model(cfg)
+        smcfg = slowmo.SlowMoConfig(num_workers=2, tau=2)
+        state = jax.tree.map(
+            np.asarray, slowmo.init_slowmo(smcfg, model.init(jax.random.PRNGKey(0)))
+        )
+        path = str(tmp_path / "gelu_ckpt")
+        ckpt.save(path, state, step=1)
+        restored, _ = ckpt.restore(path, like=state)
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_migrate_splits_at_template_width(self):
+        from repro.train.checkpoint import migrate_fused_swiglu
+
+        g = np.arange(12.0).reshape(2, 6)
+        like = {
+            "mlp": {
+                "w_gate": np.zeros((2, 4)),
+                "w_up": np.zeros((2, 2)),
+                "wo": np.zeros((6, 2)),
+            }
+        }
+        old = {"mlp": {"wi": g, "wo": np.zeros((6, 2))}}
+        out = migrate_fused_swiglu(old, like)
+        np.testing.assert_array_equal(out["mlp"]["w_gate"], g[:, :4])
+        np.testing.assert_array_equal(out["mlp"]["w_up"], g[:, 4:])
+
+
+class TestIdentityHooksPipeline:
+    """The unified pipeline with identity hooks IS the plain pipeline."""
+
+    def test_tp_loss_unbound_equals_bundle_loss(self):
+        from repro.configs import get_config
+        from repro.models import build_model, make_batch
+        from repro.models import tp as tp_lib
+
+        for arch in ("olmo-1b", "hubert-xlarge"):  # swiglu-tied + audio-gelu
+            cfg = get_config(arch, reduced=True)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            batch = make_batch(cfg, jax.random.PRNGKey(1), 2, 16)
+            a = float(jax.jit(model.loss_fn)(params, batch))
+            b = float(jax.jit(tp_lib.make_tp_loss(cfg))(params, batch))
+            assert a == b, (arch, a, b)
+
+    def test_grad_sq_fn_counts_replicated_once(self):
+        """Leaf-aware sum of squares with a fake 2-shard backend: sharded
+        leaves psum over model (here: x2), replicated leaves count once."""
+        from repro.core.base_opt import make_grad_sq_fn
+
+        class Fake2:
+            model_shards = 2
+
+            @staticmethod
+            def model_psum(x):
+                return 2.0 * x  # both shards hold identical test values
+
+        grads = {"sharded": jnp.ones((1, 4)), "rep": 3.0 * jnp.ones((1, 2))}
+        mask = {"sharded": True, "rep": False}
+        sq = make_grad_sq_fn(Fake2(), mask)(grads)
+        # 2 * (4 * 1^2) + 2 * 3^2 = 8 + 18
+        np.testing.assert_allclose(np.asarray(sq), [26.0])
+        # no mask: plain per-worker sum
+        sq_plain = make_grad_sq_fn()(grads)
+        np.testing.assert_allclose(np.asarray(sq_plain), [4.0 + 18.0])
