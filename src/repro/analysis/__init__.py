@@ -1,0 +1,44 @@
+"""Static analysis of the SlowMo round: HLO contracts + seam lint.
+
+Layers (each importable on its own):
+
+* ``repro.analysis.hlo``      — HLO text parsing (no jax import)
+* ``repro.analysis.lint``     — AST seam lint (no jax import)
+* ``repro.analysis.contract`` — Contract derived from a ``SlowMoConfig``
+  + layout: the exact collective census a round must issue
+* ``repro.analysis.rules``    — rule engine reconciling HLO against a
+  Contract (census, replica groups, wire dtype, donation, constants)
+* ``repro.analysis.audit``    — CLI sweeping preset × topology
+
+Submodules are loaded lazily so importing the package (as ``python -m
+repro.analysis.lint`` does) never drags in jax.
+"""
+from __future__ import annotations
+
+import importlib
+
+_LAZY = {
+    "Allowance": "contract",
+    "Budget": "contract",
+    "Contract": "contract",
+    "comm_units": "contract",
+    "gossip_hop_pairs": "contract",
+    "hlo_dtype": "contract",
+    "round_contract": "contract",
+    "Violation": "rules",
+    "audit_round": "rules",
+    "as_report": "rules",
+    "check_census": "rules",
+    "check_constants": "rules",
+    "check_donation": "rules",
+    "state_leaf_bytes": "rules",
+}
+
+__all__ = sorted(_LAZY) + ["audit", "contract", "hlo", "lint", "rules"]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    return getattr(importlib.import_module(f"repro.analysis.{mod}"), name)

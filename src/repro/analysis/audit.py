@@ -1,0 +1,331 @@
+"""Audit CLI: sweep preset × topology and check every round's HLO contract.
+
+For each (preset, layout, packing) case this lowers AND compiles the real
+``make_spmd_slowmo_round`` on a host-CPU device mesh, derives the
+``Contract`` from the config, and runs the full rule set
+(``repro.analysis.rules``) — census, replica groups, wire dtype, gossip
+hop endpoints, donation, large constants.  Any violation exits nonzero.
+
+::
+
+    python -m repro.analysis.audit --presets all \
+        --layouts flat,hierarchical,tp --packed both
+
+``--mutate <rule>`` seeds a deliberate contract violation into every case
+(self-test that the auditor FAILS when it should — CI runs one small
+mutated case and asserts a nonzero exit):
+
+* ``collective-count``  — a phantom boundary budget entry nothing issues
+* ``wire-dtype``        — the boundary budget demands bf16 the round
+                          issues at f32
+* ``unbudgeted-collective`` — the loss-pmean budget is dropped, so the
+                          observed loss all-reduce has no home
+* ``donation``          — a phantom state leaf that no output can alias
+* ``large-constant``    — the constant threshold drops to 1 byte
+
+The module must be imported before jax configures a backend: it pins
+``JAX_PLATFORMS=cpu`` (libtpu would probe for accelerators) and forces 8
+host devices (enough for the 2x2x2 TP mesh) unless the environment
+already chose.
+"""
+from __future__ import annotations
+
+import os
+
+if "XLA_FLAGS" not in os.environ:  # noqa: SIM112 — must precede jax import
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import contract as contract_mod
+from repro.analysis import hlo, rules
+from repro.core import slowmo
+from repro.distributed import spmd
+from repro.launch.mesh import make_hierarchical_layout, make_spmd_layout
+from repro.models import tp as tp_lib
+
+LAYOUTS = ("flat", "hierarchical", "tp")
+MUTATIONS = (
+    "collective-count",
+    "wire-dtype",
+    "unbudgeted-collective",
+    "donation",
+    "large-constant",
+)
+
+_BATCH = 4
+_DIM = 16
+_HIDDEN = 32
+_OUT = 8
+
+
+def _make_layout(kind: str):
+    if kind == "flat":
+        return make_spmd_layout(4)
+    if kind == "hierarchical":
+        return make_hierarchical_layout(2, 2)
+    if kind == "tp":
+        return make_hierarchical_layout(2, 2, 2)
+    raise ValueError(f"unknown layout {kind!r}; have {LAYOUTS}")
+
+
+def _dense_problem():
+    """Per-worker quadratic loss for the data-parallel layouts."""
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["b"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    params0 = {
+        "w": 0.3 * jax.random.normal(jax.random.PRNGKey(0), (_DIM, _DIM)),
+        "b": jnp.zeros((_DIM,)),
+    }
+
+    def make_batches(tau, num_workers):
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (tau, num_workers, _BATCH, _DIM)
+        )
+        return {"x": x, "y": jnp.sum(x, -1, keepdims=True) * 0.1}
+
+    return loss_fn, params0, make_batches
+
+
+def _tp_problem():
+    """Two-matmul TP loss (column- then row-parallel) via the model hooks."""
+
+    def loss_factory(backend):
+        def loss_fn(params, batch):
+            h = tp_lib.copy_to_tp(backend, batch["x"] + params["b0"])
+            h = jnp.tanh(h @ params["w_in"])
+            pred = (
+                tp_lib.reduce_from_tp(backend, h @ params["w_down"])
+                + params["b"]
+            )
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        return loss_fn
+
+    loss = tp_lib.TPLoss(loss_factory)
+    params0 = {
+        "w_in": 0.3 * jax.random.normal(jax.random.PRNGKey(0), (_DIM, _HIDDEN)),
+        "w_down": 0.3 * jax.random.normal(jax.random.PRNGKey(1), (_HIDDEN, _OUT)),
+        "b0": jnp.zeros((_DIM,)),
+        "b": jnp.zeros((_OUT,)),
+    }
+
+    def make_batches(tau, num_workers):
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (tau, num_workers, _BATCH, _DIM)
+        )
+        y = (jnp.sum(x, -1, keepdims=True) * 0.1) @ jnp.ones((1, _OUT))
+        return {"x": x, "y": y}
+
+    return loss, params0, make_batches
+
+
+def _mutate_contract(contract, leaf_bytes, mutation):
+    """Seed one deliberate violation; returns (contract, leaf_bytes)."""
+    if mutation == "collective-count":
+        phantom = contract_mod.Budget(
+            name="phantom-boundary",
+            op="all-reduce",
+            axes=contract.worker_axes,
+            sizes=(123456,),
+            dtype="f32",
+        )
+        contract = dataclasses.replace(
+            contract, budgets=contract.budgets + (phantom,)
+        )
+    elif mutation == "wire-dtype":
+        budgets = tuple(
+            dataclasses.replace(
+                b,
+                dtype="bf16" if b.dtype == "f32" else "f32",
+                sizes=tuple(s // 2 if b.dtype == "f32" else s * 2 for s in b.sizes),
+            )
+            if b.name == "boundary-average"
+            else b
+            for b in contract.budgets
+        )
+        contract = dataclasses.replace(contract, budgets=budgets)
+    elif mutation == "unbudgeted-collective":
+        contract = dataclasses.replace(
+            contract,
+            budgets=tuple(
+                b for b in contract.budgets if b.name != "loss-pmean"
+            ),
+        )
+    elif mutation == "donation":
+        leaf_bytes = leaf_bytes + (1 << 20,)
+    elif mutation == "large-constant":
+        contract = dataclasses.replace(contract, constant_threshold=1)
+    else:
+        raise ValueError(f"unknown mutation {mutation!r}; have {MUTATIONS}")
+    return contract, leaf_bytes
+
+
+def audit_case(
+    preset_name: str,
+    layout_kind: str,
+    packed: bool,
+    tau: int = 2,
+    mutation: str | None = None,
+) -> dict:
+    """Lower + compile one round and audit it; returns a JSON-able record."""
+    layout = _make_layout(layout_kind)
+    problem = _tp_problem() if layout_kind == "tp" else _dense_problem()
+    loss_fn, params0, make_batches = problem
+
+    cfg = slowmo.preset(preset_name, num_workers=layout.num_workers, tau=tau)
+    pack = None
+    if packed:
+        cfg = dataclasses.replace(cfg, packed=True)
+        pack = slowmo.make_state_pack_spec(cfg, params0, layout=layout)
+    state = slowmo.init_slowmo(cfg, params0, pack=pack)
+    batches = make_batches(cfg.tau, layout.num_workers)
+
+    fn = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack)
+    lowered = fn.build(state, batches).lower(state, batches, jnp.float32(0.1))
+    issued = hlo.lowered_hlo_text(lowered)
+    compiled = lowered.compile().as_text()
+
+    contract = contract_mod.round_contract(cfg, layout, params0=params0, pack=pack)
+    leaf_bytes = rules.state_leaf_bytes(state)
+    if mutation is not None:
+        contract, leaf_bytes = _mutate_contract(contract, leaf_bytes, mutation)
+    hop_pairs = (
+        contract_mod.gossip_hop_pairs(layout, cfg)
+        if cfg.base in ("sgp", "osgp", "dpsgd")
+        else None
+    )
+    violations = rules.audit_round(
+        contract,
+        layout.mesh,
+        issued,
+        compiled_text=compiled,
+        leaf_bytes=leaf_bytes,
+        hop_pairs=hop_pairs,
+    )
+    return {
+        "preset": preset_name,
+        "layout": layout_kind,
+        "packed": packed,
+        "tau": cfg.tau,
+        "boundary_bytes": contract.boundary_bytes,
+        "n_collectives": len(hlo.collective_ops(issued)),
+        "violations": rules.as_report(violations),
+    }
+
+
+def _parse_list(value: str, universe: tuple[str, ...], what: str) -> list[str]:
+    if value == "all":
+        return list(universe)
+    items = [v.strip() for v in value.split(",") if v.strip()]
+    unknown = [v for v in items if v not in universe]
+    if unknown:
+        raise SystemExit(f"unknown {what}: {unknown}; have {list(universe)}")
+    return items
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="contract-audit the SlowMo round across preset x topology",
+    )
+    parser.add_argument(
+        "--presets",
+        default="all",
+        help="comma list of preset names, or 'all' "
+        f"({len(slowmo.PRESET_NAMES)} presets)",
+    )
+    parser.add_argument(
+        "--layouts",
+        default="flat,hierarchical,tp",
+        help="comma list from {flat,hierarchical,tp}, or 'all'",
+    )
+    parser.add_argument(
+        "--packed",
+        default="both",
+        choices=["packed", "tree", "both"],
+        help="state layout(s) to audit",
+    )
+    parser.add_argument("--tau", type=int, default=2, help="inner steps")
+    parser.add_argument(
+        "--mutate",
+        default=None,
+        choices=list(MUTATIONS),
+        help="seed a deliberate violation (auditor self-test; must fail)",
+    )
+    parser.add_argument(
+        "--json", action="store_true", help="emit the full JSON report to stdout"
+    )
+    parser.add_argument(
+        "--out", default=None, help="also write the JSON report to this path"
+    )
+    args = parser.parse_args(argv)
+
+    presets = _parse_list(args.presets, slowmo.PRESET_NAMES, "presets")
+    layouts = _parse_list(args.layouts, LAYOUTS, "layouts")
+    packings = {
+        "packed": [True],
+        "tree": [False],
+        "both": [False, True],
+    }[args.packed]
+
+    cases = []
+    total = 0
+    for layout_kind in layouts:
+        for preset_name in presets:
+            for packed in packings:
+                case = audit_case(
+                    preset_name,
+                    layout_kind,
+                    packed,
+                    tau=args.tau,
+                    mutation=args.mutate,
+                )
+                cases.append(case)
+                n = len(case["violations"])
+                total += n
+                if not args.json:
+                    tag = (
+                        f"{layout_kind:12s} {preset_name:24s} "
+                        f"{'packed' if packed else 'tree':6s}"
+                    )
+                    status = "ok" if n == 0 else f"FAIL ({n})"
+                    print(
+                        f"{status:9s} {tag} "
+                        f"boundary={case['boundary_bytes']}B "
+                        f"collectives={case['n_collectives']}"
+                    )
+                    for v in case["violations"][:8]:
+                        print(f"    {v['rule']}: {v['message']}")
+
+    report = {
+        "mutation": args.mutate,
+        "n_cases": len(cases),
+        "n_violations": total,
+        "cases": cases,
+    }
+    if args.json:
+        print(json.dumps(report, indent=2))
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2)
+    if not args.json:
+        print(
+            f"{len(cases)} case(s), {total} violation(s)"
+            + (f" [mutation={args.mutate}]" if args.mutate else "")
+        )
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,352 @@
+"""Collective contracts: the expected census of a SlowMo round, from config.
+
+``round_contract(cfg, layout, ...)`` derives — statically, from the
+``SlowMoConfig`` and the ``WorkerLayout`` alone — exactly which collectives
+the lowered round is allowed to issue: op kinds, counts per inner step and
+per boundary, the mesh axes each one reduces over, its wire dtype, and its
+per-op byte size.  ``repro.analysis.rules`` then checks a real lowered
+module against the contract.
+
+The derivation mirrors the round body (``core.slowmo`` / ``core.gossip`` /
+``core.comm``) clause by clause:
+
+* inner steps appear ONCE in pre-optimization HLO under ``lax.fori_loop``
+  (the loop body is a single subcomputation) and ``cfg.tau`` times when
+  ``unroll_inner=True``;
+* the scalar loss mean is one 4-byte all-reduce over worker+batch axes per
+  step;
+* gradient sync: the AR base all-reduces every gradient unit over
+  worker+batch axes each step (``mean_keepdims``); hierarchical layouts
+  all-reduce over the batch (``data``) axes only (``grad_mean``); flat
+  local/gossip layouts sync nothing;
+* gossip: SGP/OSGP emit one collective-permute per hop branch of the
+  ``lax.switch`` (ALL branches appear in the HLO) per buffer, plus one
+  4-byte push-sum-weight permute per branch; D-PSGD emits two ring rolls
+  per buffer per step; the permuted message rides at
+  ``average_dtype`` when set;
+* the boundary exact average (Algorithm 1 line 6) is one all-reduce per
+  state buffer over the WORKER axes only, at ``average_dtype`` (f32 when
+  unset) — on packed state that is ONE buffer per dtype group;
+* ``buffer_strategy='average'`` adds one all-reduce per momentum buffer
+  (plus second moments under Adam) over worker+batch axes;
+* ``track_drift`` adds a second worker-mean of the params, a 4-byte worker
+  psum, and (under tensor parallelism) a 4-byte model psum;
+* tensor-parallel losses issue model-axis reductions from inside the
+  forward/backward — their count is loss-dependent, so the contract grants
+  an *allowance* (any number of model-axis all-reduces, each bounded by
+  ``model_collective_max_bytes``) instead of an exact budget.
+
+A "unit" is one communication buffer: a dtype-group flat buffer on the
+packed path, a parameter leaf on the tree path (its LOCAL model shard under
+tensor parallelism — which is what makes boundary bytes shrink by 1/TP).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import packing, topology
+
+#: HLO dtype token of a numpy/jax dtype name.
+_HLO_DTYPE = {
+    "float64": "f64", "float32": "f32", "float16": "f16", "bfloat16": "bf16",
+    "int64": "s64", "int32": "s32", "int16": "s16", "int8": "s8",
+    "uint64": "u64", "uint32": "u32", "uint16": "u16", "uint8": "u8",
+    "bool": "pred",
+}
+
+
+def hlo_dtype(dtype) -> str:
+    """HLO text token (``f32``/``bf16``/...) of a jax/numpy dtype."""
+    return _HLO_DTYPE[jax.numpy.dtype(dtype).name]
+
+
+def _dtype_size(dtype) -> int:
+    return jax.numpy.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """An exact collective budget: the round must issue exactly
+    ``len(sizes)`` ops of kind ``op`` reducing over mesh ``axes``, whose
+    per-op byte sizes form the multiset ``sizes`` (each at wire ``dtype``
+    when set)."""
+
+    name: str
+    op: str
+    axes: tuple[str, ...]
+    sizes: tuple[int, ...]
+    dtype: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Allowance:
+    """A loss-dependent grant: any number of collectives of the given kinds
+    over ``axes``, each no larger than ``max_bytes`` (None = unbounded).
+    Used for model-axis activation reductions, whose count depends on the
+    loss body rather than the SlowMo config."""
+
+    name: str
+    axes: tuple[str, ...]
+    ops: tuple[str, ...] = ("all-reduce",)
+    max_bytes: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Everything the auditor checks a lowered/compiled round against."""
+
+    mesh_axes: tuple[str, ...]
+    worker_axes: tuple[str, ...]
+    batch_axes: tuple[str, ...]
+    model_axes: tuple[str, ...]
+    budgets: tuple[Budget, ...]
+    allowances: tuple[Allowance, ...] = ()
+    #: every donated state leaf at least this large must appear in the
+    #: compiled module's ``input_output_alias`` (dropped donation = XLA
+    #: inserted a defensive copy and peak memory doubled)
+    donate_min_bytes: int = 1024
+    #: no materialized constant in the compiled round may reach this size
+    #: (a buffer-sized constant means a mask/init was baked into the program)
+    constant_threshold: int = 4096
+
+    @property
+    def boundary_bytes(self) -> int:
+        """Expected bytes of the boundary exact-average all-reduce(s) — the
+        communication-efficiency headline number (DeMo's metric)."""
+        return sum(
+            sum(b.sizes) for b in self.budgets if b.name == "boundary-average"
+        )
+
+    def describe(self) -> dict:
+        return {
+            "worker_axes": list(self.worker_axes),
+            "batch_axes": list(self.batch_axes),
+            "model_axes": list(self.model_axes),
+            "boundary_bytes": self.boundary_bytes,
+            "budgets": [dataclasses.asdict(b) for b in self.budgets],
+            "allowances": [dataclasses.asdict(a) for a in self.allowances],
+        }
+
+
+def _effective_model_axes(layout) -> tuple[str, ...]:
+    return tuple(
+        a for a in layout.model_axes if a in layout.mesh.axis_names
+    )
+
+
+def comm_units(cfg, layout, params0=None, pack=None) -> list[int]:
+    """Per-device element count of every communication unit of the state.
+
+    Packed state: one unit per dtype group, ``shard_rows * LANES`` elements
+    (the per-shard spec under tensor parallelism).  Tree state: one unit per
+    parameter leaf, divided by the TP degree for model-sharded leaves."""
+    if cfg.packed:
+        if pack is None:
+            raise ValueError("packed contract needs the round's PackSpec")
+        spec = pack.shard if isinstance(pack, packing.ShardedPackSpec) else pack
+        return [spec.rows(g) * packing.LANES for g in spec.groups]
+    if params0 is None:
+        raise ValueError("tree contract needs params0 (arrays or shape structs)")
+    leaves = jax.tree.leaves(params0)
+    tp = getattr(layout, "model_shard", 1)
+    if tp > 1:
+        from repro.distributed import sharding
+
+        mask = jax.tree.leaves(sharding.model_sharded_mask(params0, tp))
+        return [
+            int(np.prod(x.shape, dtype=np.int64)) // (tp if m else 1)
+            for x, m in zip(leaves, mask)
+        ]
+    return [int(np.prod(x.shape, dtype=np.int64)) for x in leaves]
+
+
+def round_contract(
+    cfg,
+    layout,
+    params0=None,
+    pack=None,
+    *,
+    model_collective_max_bytes: int | None = None,
+    constant_threshold: int = 4096,
+) -> Contract:
+    """Derive the collective contract of ``make_spmd_slowmo_round(cfg, ...,
+    layout)`` — see the module docstring for the clause-by-clause census."""
+    wax = tuple(layout.worker_axes)
+    bax = tuple(layout.batch_axes)
+    max_ = _effective_model_axes(layout)
+    sax = wax + bax
+    tp = getattr(layout, "model_shard", 1)
+    W = cfg.num_workers
+    steps = cfg.tau if cfg.unroll_inner else 1
+    units = comm_units(cfg, layout, params0=params0, pack=pack)
+
+    param_size = _dtype_size(cfg.param_dtype)
+    param_name = hlo_dtype(cfg.param_dtype)
+    avg = cfg.average_dtype
+    avg_size = _dtype_size(avg) if avg is not None else 4
+    avg_name = hlo_dtype(avg) if avg is not None else "f32"
+    # gradients ride f32 on the packed path (packed with dtype=f32) and at
+    # param dtype on the tree path (vgrad output, uncast)
+    grad_size, grad_name = (4, "f32") if cfg.packed else (param_size, param_name)
+
+    budgets: list[Budget] = []
+    allowances: list[Allowance] = []
+
+    def add(name, op, axes, sizes, dtype=None):
+        if sizes:
+            budgets.append(Budget(name, op, tuple(axes), tuple(sizes), dtype))
+
+    # scalar loss mean: worker + batch axes, every step
+    add("loss-pmean", "all-reduce", sax, (4,) * steps, "f32")
+
+    # gradient sync
+    if cfg.base == "ar":
+        add(
+            "ar-grad-sync",
+            "all-reduce",
+            sax,
+            tuple(u * grad_size for u in units) * steps,
+            grad_name,
+        )
+    elif bax:
+        # hierarchical within-pod sync; packed even when the local base
+        # carries the tree inside the loop (grad_pack packs just the grads)
+        add(
+            "pod-grad-sync",
+            "all-reduce",
+            bax,
+            tuple(u * grad_size for u in units) * steps,
+            grad_name,
+        )
+
+    # gossip mixing
+    gkind = cfg.gossip_config.kind
+    if gkind != "none" and W > 1:
+        comm_dtype = cfg.average_dtype
+        if gkind == "dpsgd":
+            msg_size = _dtype_size(comm_dtype) if comm_dtype else param_size
+            msg_name = hlo_dtype(comm_dtype) if comm_dtype else param_name
+            add(
+                "gossip-ring",
+                "collective-permute",
+                wax,
+                tuple(u * msg_size for u in units) * 2 * steps,
+                msg_name,
+            )
+        else:
+            # sgp message = half the params (param dtype); osgp message = the
+            # stale buffer (f32); both cast to average_dtype for the wire
+            base_size, base_name = (
+                (param_size, param_name) if gkind == "sgp" else (4, "f32")
+            )
+            msg_size = _dtype_size(comm_dtype) if comm_dtype else base_size
+            msg_name = hlo_dtype(comm_dtype) if comm_dtype else base_name
+            hops = len(topology.exponential_hops(W))
+            add(
+                "gossip-message",
+                "collective-permute",
+                wax,
+                tuple(u * msg_size for u in units) * hops * steps,
+                msg_name,
+            )
+            num_worker_devices = int(
+                np.prod([layout.mesh.shape[a] for a in wax], dtype=np.int64)
+            )
+            local_w = max(W // max(num_worker_devices, 1), 1)
+            add(
+                "gossip-weight",
+                "collective-permute",
+                wax,
+                (local_w * 4,) * hops * steps,
+                "f32",
+            )
+
+    # tensor-parallel global-norm clip: one scalar model psum per step
+    if tp > 1 and cfg.inner.clip_norm:
+        add("clip-model-sum", "all-reduce", max_, (4,) * steps, "f32")
+
+    # drift metric: a second worker-mean of the params (always f32 — drift
+    # ignores average_dtype), a scalar worker psum, and a scalar model psum
+    # under tensor parallelism
+    if cfg.track_drift:
+        add("drift-mean", "all-reduce", wax, tuple(u * 4 for u in units), "f32")
+        add("drift-sum", "all-reduce", wax, (4,), "f32")
+        if tp > 1:
+            add("drift-model-sum", "all-reduce", max_, (4,), "f32")
+
+    # boundary exact average (Algorithm 1 line 6): worker axes ONLY
+    if cfg.exact_average:
+        add(
+            "boundary-average",
+            "all-reduce",
+            wax,
+            tuple(u * avg_size for u in units),
+            avg_name,
+        )
+
+    # buffer strategy 'average': momentum (+ Adam second moment) all-reduce
+    if cfg.buffer_strategy == "average":
+        n_buf = 2 if cfg.inner.kind == "adam" else 1
+        add(
+            "buffer-average",
+            "all-reduce",
+            sax,
+            tuple(u * 4 for u in units) * n_buf,
+            "f32",
+        )
+
+    if tp > 1:
+        allowances.append(
+            Allowance(
+                "tp-loss-reductions",
+                max_,
+                ops=("all-reduce",),
+                max_bytes=model_collective_max_bytes,
+            )
+        )
+
+    return Contract(
+        mesh_axes=tuple(layout.mesh.axis_names),
+        worker_axes=wax,
+        batch_axes=bax,
+        model_axes=max_,
+        budgets=tuple(budgets),
+        allowances=tuple(allowances),
+        constant_threshold=constant_threshold,
+    )
+
+
+def gossip_hop_pairs(layout, cfg) -> frozenset:
+    """Every (source, target) device pair a gossip permute may use: all hop
+    phases of the exponential graph over the worker axes, within each slice
+    of the remaining axes.  ``rules.check_census`` uses this to validate
+    permute endpoints beyond mere axis membership."""
+    from repro.analysis import hlo as hlo_mod
+
+    W = cfg.num_workers
+    if cfg.gossip_config.kind == "dpsgd":
+        hops = [1, W - 1]
+    else:
+        hops = list(topology.exponential_hops(W))
+    pairs = set()
+    groups = hlo_mod.mesh_axis_groups(layout.mesh, layout.worker_axes)
+    for group in groups:
+        m = len(group)
+        for hop in hops:
+            for j in range(m):
+                pairs.add((group[j], group[(j + hop) % m]))
+    return frozenset(pairs)
+
+
+__all__ = [
+    "Allowance",
+    "Budget",
+    "Contract",
+    "comm_units",
+    "gossip_hop_pairs",
+    "hlo_dtype",
+    "round_contract",
+]

@@ -1,0 +1,289 @@
+"""HLO text parsing: collectives, replica groups, aliasing, constants.
+
+The textual (per-device, post-SPMD-partitioning) HLO module is the one
+artifact every invariant in this repo ultimately lives in: which collectives
+a SlowMo round issues, over which device groups, at which wire dtype, and
+whether the donated state buffers actually alias their outputs.  This module
+is the *parsing* layer only — it turns HLO text into plain records — and is
+deliberately free of jax imports so the golden-fixture tests exercise it
+without compiling anything.  Contract derivation lives in
+``repro.analysis.contract``; rule checking in ``repro.analysis.rules``.
+
+Two HLO flavors matter and they answer different questions:
+
+* pre-optimization text (``lowered_hlo_text``) shows collectives as ISSUED,
+  one per ``lax`` call, with issued dtypes — XLA:CPU's float normalization
+  would rewrite a bf16 all-reduce to f32 in the optimized module, hiding
+  the traffic halving of ``average_dtype=bf16``;
+* compiled text (``compiled.as_text()``) is what runs — donation
+  (``input_output_alias``) and materialized constants are only visible here,
+  and combined (variadic tuple-operand) collectives only appear here.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_shapes(type_str: str) -> list[tuple[str, int]]:
+    """Every array shape in an HLO type string as ``(dtype, bytes)`` pairs.
+
+    A plain result type (``f32[64,1024]{2,1,0}``) yields one pair; a tuple
+    type — the variadic form XLA's all-reduce combiner emits, e.g.
+    ``(f32[64,1024]{2,1,0}, f32[48]{0})`` — yields one pair PER OPERAND, so
+    callers can count a combined all-reduce as the several buffers it moves
+    rather than one mystery blob.  Layout suffixes (``{2,1,0}``) never match
+    because they carry no dtype token."""
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        shapes.append((dtype, n * _DTYPE_BYTES[dtype]))
+    return shapes
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(b for _, b in parse_shapes(type_str))
+
+
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[\d, ]*\},?\s*)*)\}")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def parse_replica_groups(line: str):
+    """Replica groups of one HLO collective line, as a tuple of id-tuples.
+
+    Handles both textual forms XLA emits: explicit braces
+    (``replica_groups={{0,1},{2,3}}``) and the iota form
+    (``replica_groups=[2,2]<=[4]`` / ``...<=[2,2]T(1,0)``).  Returns ``None``
+    when the line carries no replica_groups attribute, and ``()`` for XLA's
+    empty form ``replica_groups={}``, which means ALL replicas form one
+    group — consumers comparing against ``mesh_axis_groups`` must treat
+    ``()`` as that full-device group (see ``repro.analysis.rules``)."""
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return tuple(
+            tuple(int(x) for x in g.split(",") if x.strip())
+            for g in re.findall(r"\{([\d, ]*)\}", m.group(1))
+        )
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        return tuple(
+            tuple(int(x) for x in row) for row in ids.reshape(n_groups, group_size)
+        )
+    return None
+
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?\s*)+)\}")
+
+
+def parse_source_target_pairs(line: str):
+    """(source, target) device pairs of a collective-permute line, or None."""
+    m = _PAIRS_RE.search(line)
+    if not m:
+        return None
+    return tuple(
+        (int(s), int(t))
+        for s, t in re.findall(r"\{(\d+),(\d+)\}", m.group(1))
+    )
+
+
+def normalize_groups(groups) -> frozenset:
+    """Order-insensitive form of a replica-group list for comparisons (the
+    order of ids within an all-reduce group is semantically irrelevant)."""
+    return frozenset(frozenset(g) for g in groups)
+
+
+def mesh_axis_groups(mesh, axes) -> tuple[tuple[int, ...], ...]:
+    """Expected replica groups (device ids) of a collective reducing over
+    ``axes`` of ``mesh``: one group per slice along the remaining axes.
+
+    This is what lets contracts pin the TWO-LEVEL structure of hierarchical
+    layouts — inner-step gradient all-reduces grouped over ``('data',)``
+    only, boundary all-reduces grouped over ``('pod',)`` only — rather than
+    bare op counts."""
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    names = list(mesh.axis_names)
+    red = [names.index(a) for a in axes]
+    keep = [i for i in range(ids.ndim) if i not in red]
+    moved = ids.transpose(keep + red)
+    group_size = int(np.prod([ids.shape[i] for i in red], dtype=np.int64))
+    return tuple(
+        tuple(int(x) for x in row) for row in moved.reshape(-1, group_size)
+    )
+
+
+def collective_ops(hlo_text: str) -> list[dict[str, Any]]:
+    """Every collective op in the HLO text, in program order.
+
+    Each record carries the op kind, total result ``bytes``, per-operand
+    ``operand_bytes``/``dtypes`` (more than one entry for variadic
+    tuple-shaped collectives — XLA's all-reduce combiner fuses several
+    buffers into one op and the old single-``bytes`` view undercounted
+    them), parsed ``replica_groups`` / ``source_target_pairs``, and the raw
+    ``line`` for error reporting.  ``-start`` async forms are counted;
+    ``-done`` forms carry no new traffic and are skipped."""
+    ops: list[dict[str, Any]] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or "=" not in line:
+            continue
+        for op in COLLECTIVE_OPS:
+            m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
+            if m:
+                shapes = parse_shapes(m.group(1))
+                ops.append(
+                    {
+                        "op": op,
+                        "bytes": sum(b for _, b in shapes),
+                        "operand_bytes": tuple(b for _, b in shapes),
+                        "dtypes": tuple(d for d, _ in shapes),
+                        "replica_groups": parse_replica_groups(line),
+                        "source_target_pairs": parse_source_target_pairs(line),
+                        "line": line,
+                    }
+                )
+                break
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op, per op kind, from HLO text.
+
+    Besides the per-kind byte totals, the result carries two metadata keys
+    (excluded from any ``sum`` by their ``_`` prefix): ``_counts`` — number
+    of ops per kind — and ``_sizes`` — the individual operand sizes.  A
+    variadic tuple-shaped all-reduce contributes one ``_counts`` entry but
+    one ``_sizes`` entry PER OPERAND, so "exactly one LARGE all-reduce"
+    style pins keep working on combined modules."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    sizes = {k: [] for k in COLLECTIVE_OPS}
+    for rec in collective_ops(hlo_text):
+        op = rec["op"]
+        out[op] += rec["bytes"]
+        counts[op] += 1
+        sizes[op].extend(rec["operand_bytes"])
+    out["_counts"] = counts  # type: ignore[assignment]
+    out["_sizes"] = sizes  # type: ignore[assignment]
+    return out
+
+
+def lowered_hlo_text(lowered) -> str:
+    """Pre-optimization HLO text of a ``jax`` lowered object.
+
+    Collective dtypes appear here as ISSUED by the program.  The optimized
+    (compiled) module is what actually runs, but XLA:CPU's float
+    normalization promotes bf16 all-reduces to f32 there, which would hide
+    the traffic halving of ``average_dtype=bf16`` when auditing on the
+    host-CPU mesh; on TPU the bf16 collective survives to the wire."""
+    ir = lowered.compiler_ir(dialect="hlo")
+    return ir.as_hlo_text() if hasattr(ir, "as_hlo_text") else str(ir)
+
+
+def _balanced_braces(text: str, start: int) -> str:
+    """Contents of the brace group opening at ``text[start] == '{'``."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start + 1 : i]
+    return text[start + 1 :]
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d, ]*)\}:\s*\((\d+),\s*\{([\d, ]*)\},\s*([\w-]+)\)"
+)
+
+
+def parse_input_output_alias(hlo_text: str) -> list[dict[str, Any]]:
+    """``input_output_alias`` entries of a compiled HloModule, one dict per
+    aliased output: ``output_index`` (tuple into the result tuple),
+    ``param_number``, ``param_index``, and ``kind`` (``may-alias`` /
+    ``must-alias``).
+
+    This is where dropped donation shows up: ``jax.jit(...,
+    donate_argnums=0)`` on the SlowMo round must alias every donated state
+    buffer to an output — an empty or short alias list means XLA inserted
+    defensive copies and the round silently doubled its peak memory."""
+    m = re.search(r"input_output_alias=", hlo_text)
+    if not m:
+        return []
+    body = _balanced_braces(hlo_text, hlo_text.index("{", m.end()))
+    entries = []
+    for out_idx, param, param_idx, kind in _ALIAS_ENTRY_RE.findall(body):
+        entries.append(
+            {
+                "output_index": tuple(
+                    int(x) for x in out_idx.split(",") if x.strip()
+                ),
+                "param_number": int(param),
+                "param_index": tuple(
+                    int(x) for x in param_idx.split(",") if x.strip()
+                ),
+                "kind": kind,
+            }
+        )
+    return entries
+
+
+_CONSTANT_RE = re.compile(r"(\S+)\s+=\s+(\S+)\s+constant\(")
+
+
+def constant_defs(hlo_text: str) -> list[dict[str, Any]]:
+    """Every materialized ``constant(...)`` definition: name, dtype, bytes.
+
+    Large entries are the footprint of an embedded buffer — e.g. a
+    buffer-sized pytree mask baked into the compiled round instead of being
+    computed on the fly or passed as an argument.  Scalar constants and
+    small index vectors are normal; the ``large-constant`` rule thresholds
+    on bytes."""
+    out = []
+    for raw in hlo_text.splitlines():
+        m = _CONSTANT_RE.search(raw.strip())
+        if not m:
+            continue
+        shapes = parse_shapes(m.group(2))
+        if not shapes:
+            continue
+        out.append(
+            {
+                "name": m.group(1),
+                "dtype": shapes[0][0],
+                "bytes": sum(b for _, b in shapes),
+            }
+        )
+    return out

@@ -1,0 +1,286 @@
+"""AST lint: repo seam contracts the type system cannot express.
+
+The SlowMo round is written once against the ``CommBackend`` seam
+(``core/comm.py``); everything the PR-5 refactor pinned in docstrings —
+who may issue collectives, who may construct backends, where axis names
+may appear — is enforced here mechanically.  Pure ``ast``, no jax import,
+so the CI lint job runs it without touching device state.
+
+Rules (allowlists are module paths relative to the source root):
+
+* ``raw-collective``   — ``lax.psum``/``pmean``/``pmax``/``ppermute``/
+  ``all_gather``/``all_to_all``/``psum_scatter``/``axis_index`` calls
+  anywhere but ``core/comm.py``: collectives go through the backend seam
+  so the axis oracle, the mesh path, and the contract auditor stay in
+  lockstep.
+* ``shard-map-seam``   — importing or calling ``shard_map`` outside
+  ``distributed/spmd.py``: one wrapper owns in/out specs, donation, and
+  backend construction.
+* ``mesh-backend-seam`` — constructing ``MeshBackend`` outside
+  ``core/comm.py`` / ``distributed/spmd.py``: its methods are only valid
+  inside the shard_map body the spmd wrapper builds.
+* ``axis-literal``     — the mesh axis names ``'pod'``/``'data'``/
+  ``'model'`` as string constants outside ``launch/mesh.py`` /
+  ``distributed/sharding.py``: axis names flow from the WorkerLayout, so
+  a topology rename stays a two-file change.
+* ``worker-primitive-in-loss`` — model code (``models/``) calling
+  worker-axis backend methods: losses reach ONLY the model-axis hooks
+  (``model_psum``/``model_pmax``/``model_index``); the round body owns the
+  worker axis (the ``comm.py`` calling contract).
+* ``deleted-api``      — any ``.psum_scalar(`` call: the pre-PR-5 API that
+  double-counted model-replicated scalars; its replacements are
+  ``worker_psum_scalar`` (worker axes) and ``make_grad_sq_fn``
+  (leaf-aware).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import sys
+
+RAW_COLLECTIVES = frozenset(
+    {
+        "psum",
+        "pmean",
+        "pmax",
+        "pmin",
+        "ppermute",
+        "all_gather",
+        "all_to_all",
+        "psum_scatter",
+        "axis_index",
+    }
+)
+WORKER_PRIMITIVES = frozenset(
+    {
+        "pmean_scalar",
+        "grad_mean",
+        "worker_psum_scalar",
+        "worker_mean",
+        "mean_keepdims",
+        "bcast",
+        "roll",
+        "roll_tree",
+    }
+)
+AXIS_NAMES = frozenset({"pod", "data", "model"})
+
+ALLOW = {
+    "raw-collective": frozenset({"repro/core/comm.py"}),
+    "shard-map-seam": frozenset({"repro/distributed/spmd.py"}),
+    "mesh-backend-seam": frozenset(
+        {"repro/core/comm.py", "repro/distributed/spmd.py"}
+    ),
+    "axis-literal": frozenset(
+        {
+            "repro/launch/mesh.py",
+            "repro/distributed/sharding.py",
+            # the lint's own vocabulary table
+            "repro/analysis/lint.py",
+        }
+    ),
+    "deleted-api": frozenset(),
+}
+
+
+@dataclasses.dataclass
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _attr_parts(node: ast.expr) -> list[str]:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, relpath: str, in_models: bool):
+        self.relpath = relpath
+        self.in_models = in_models
+        self.violations: list[LintViolation] = []
+        self.lax_imports: set[str] = set()  # names imported from jax.lax
+        self.shard_map_names: set[str] = set()
+
+    def _allowed(self, rule: str) -> bool:
+        return self.relpath in ALLOW.get(rule, frozenset())
+
+    def _flag(self, rule: str, node: ast.AST, message: str):
+        if not self._allowed(rule):
+            self.violations.append(
+                LintViolation(rule, self.relpath, node.lineno, message)
+            )
+
+    # -- imports ------------------------------------------------------------
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "jax.lax":
+            for alias in node.names:
+                if alias.name in RAW_COLLECTIVES:
+                    self.lax_imports.add(alias.asname or alias.name)
+                    self._flag(
+                        "raw-collective",
+                        node,
+                        f"import of lax.{alias.name} outside the comm seam",
+                    )
+        if node.module and "shard_map" in node.module or any(
+            a.name == "shard_map" for a in node.names
+        ):
+            for alias in node.names:
+                if alias.name == "shard_map":
+                    self.shard_map_names.add(alias.asname or alias.name)
+                    self._flag(
+                        "shard-map-seam",
+                        node,
+                        "shard_map imported outside distributed/spmd.py",
+                    )
+        self.generic_visit(node)
+
+    # -- calls --------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            parts = _attr_parts(func)
+            attr = func.attr
+            if attr in RAW_COLLECTIVES and "lax" in parts[:-1]:
+                self._flag(
+                    "raw-collective",
+                    node,
+                    f"raw lax.{attr} call outside the comm seam "
+                    "(use a CommBackend method)",
+                )
+            if attr == "shard_map":
+                self._flag(
+                    "shard-map-seam",
+                    node,
+                    "shard_map call outside distributed/spmd.py",
+                )
+            if attr == "MeshBackend":
+                self._flag(
+                    "mesh-backend-seam",
+                    node,
+                    "MeshBackend constructed outside the spmd wrapper",
+                )
+            if attr == "psum_scalar":
+                self._flag(
+                    "deleted-api",
+                    node,
+                    ".psum_scalar() was removed in the TP refactor: use "
+                    "worker_psum_scalar or make_grad_sq_fn",
+                )
+            if self.in_models and attr in WORKER_PRIMITIVES:
+                self._flag(
+                    "worker-primitive-in-loss",
+                    node,
+                    f".{attr}() is a worker-axis primitive — losses may "
+                    "only use the model hooks (model_psum/model_pmax/"
+                    "model_index)",
+                )
+        elif isinstance(func, ast.Name):
+            if func.id in self.lax_imports:
+                self._flag(
+                    "raw-collective",
+                    node,
+                    f"raw {func.id} call outside the comm seam",
+                )
+            if func.id in self.shard_map_names or func.id == "shard_map":
+                self._flag(
+                    "shard-map-seam",
+                    node,
+                    "shard_map call outside distributed/spmd.py",
+                )
+            if func.id == "MeshBackend":
+                self._flag(
+                    "mesh-backend-seam",
+                    node,
+                    "MeshBackend constructed outside the spmd wrapper",
+                )
+        self.generic_visit(node)
+
+    # -- literals -----------------------------------------------------------
+    def visit_Constant(self, node: ast.Constant):
+        if isinstance(node.value, str) and node.value in AXIS_NAMES:
+            self._flag(
+                "axis-literal",
+                node,
+                f"mesh axis name {node.value!r} hard-coded — take axes from "
+                "the WorkerLayout",
+            )
+
+
+def lint_file(path: str, src_root: str) -> list[LintViolation]:
+    relpath = os.path.relpath(path, src_root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [LintViolation("syntax", relpath, e.lineno or 0, str(e))]
+    checker = _Checker(relpath, in_models="repro/models/" in relpath)
+    checker.visit(tree)
+    return checker.violations
+
+
+def lint_paths(paths: list[str], src_root: str) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, _, files in os.walk(p):
+                if "__pycache__" in dirpath:
+                    continue
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(lint_file(os.path.join(dirpath, f), src_root))
+        else:
+            out.append(lint_file(p, src_root))
+    # flatten (lint_file returns lists)
+    flat: list[LintViolation] = []
+    for item in out:
+        flat.extend(item if isinstance(item, list) else [item])
+    return flat
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="seam-contract AST lint (see module docstring)",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        help="files or directories to lint (default: the repro package)",
+    )
+    parser.add_argument("--json", action="store_true", help="JSON report")
+    args = parser.parse_args(argv)
+
+    pkg_dir = os.path.dirname(os.path.abspath(__file__))
+    src_root = os.path.dirname(os.path.dirname(pkg_dir))  # .../src
+    paths = args.paths or [os.path.join(src_root, "repro")]
+    violations = lint_paths(paths, src_root)
+    if args.json:
+        print(json.dumps([v.as_dict() for v in violations], indent=2))
+    else:
+        for v in violations:
+            print(v)
+        print(f"{len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,347 @@
+"""Contract rules: check a lowered/compiled SlowMo round against its Contract.
+
+The auditor buckets every observed collective by ``(op kind, mesh axes)`` —
+resolving the axes from its replica groups (all-reduce family) or its
+source-target pairs (collective-permute) — and then reconciles each bucket
+against the contract's exact budgets and loss-dependent allowances.  The
+violation taxonomy:
+
+* ``replica-groups``   — groups that overlap, fail to cover the mesh, or
+                         match no axis subset of the mesh; permute pairs
+                         that cross unexpected axes or repeat endpoints
+* ``collective-count`` — a budget entry with no matching op (missing), or
+                         an allowance exceeded (op larger than its bound)
+* ``wire-dtype``       — an op moving the right element count at the wrong
+                         dtype (e.g. the bf16 boundary all-reduce silently
+                         promoted to f32)
+* ``unbudgeted-collective`` — an op in a bucket no budget or allowance
+                         covers
+* ``donation``         — a donated state buffer missing from the compiled
+                         module's ``input_output_alias`` (defensive copy)
+* ``large-constant``   — a buffer-sized constant materialized in the
+                         compiled round (a baked-in mask/init)
+
+Census rules read PRE-OPTIMIZATION text (issued collectives and dtypes);
+donation and constants read the COMPILED text — pass both when available.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+import numpy as np
+
+from repro.analysis import hlo
+
+
+@dataclasses.dataclass
+class Violation:
+    rule: str
+    message: str
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {"rule": self.rule, "message": self.message, "detail": self.detail}
+
+
+_TOKEN_BYTES = dict(hlo._DTYPE_BYTES)
+
+
+def state_leaf_bytes(state) -> tuple[int, ...]:
+    """Byte size of every leaf of a (to-be-donated) state pytree, in flatten
+    order — the order jit assigns donated parameter numbers."""
+    import jax
+
+    return tuple(
+        int(np.prod(x.shape, dtype=np.int64)) * np.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(state)
+    )
+
+
+class _AxisResolver:
+    """Resolve an observed collective to the mesh axes it spans."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        names = tuple(mesh.axis_names)
+        self.all_axes = names
+        ids = np.vectorize(lambda d: d.id)(mesh.devices)
+        self.all_ids = frozenset(int(i) for i in ids.ravel())
+        self.coords = {
+            int(ids[idx]): idx for idx in np.ndindex(ids.shape)
+        }
+        self.group_map = {}
+        for r in range(1, len(names) + 1):
+            for sub in itertools.combinations(names, r):
+                key = hlo.normalize_groups(hlo.mesh_axis_groups(mesh, sub))
+                # first (smallest) subset wins on collisions (size-1 axes)
+                self.group_map.setdefault(key, sub)
+
+    def from_groups(self, groups):
+        """Axes of a replica-grouped collective, or a Violation."""
+        if groups is None:
+            return Violation(
+                "replica-groups", "collective carries no replica_groups"
+            )
+        if groups == ():  # XLA's empty form: all devices, one group
+            return self.all_axes
+        flat = [i for g in groups for i in g]
+        if len(flat) != len(set(flat)):
+            return Violation(
+                "replica-groups",
+                "replica groups overlap",
+                {"groups": [list(g) for g in groups]},
+            )
+        if set(flat) != self.all_ids:
+            return Violation(
+                "replica-groups",
+                "replica groups do not cover the mesh",
+                {"groups": [list(g) for g in groups]},
+            )
+        axes = self.group_map.get(hlo.normalize_groups(groups))
+        if axes is None:
+            return Violation(
+                "replica-groups",
+                "replica groups match no axis subset of the mesh",
+                {"groups": [list(g) for g in groups]},
+            )
+        return axes
+
+    def from_pairs(self, pairs):
+        """Axes of a collective-permute, or a Violation."""
+        if not pairs:
+            return Violation(
+                "replica-groups", "collective-permute carries no pairs"
+            )
+        srcs = [s for s, _ in pairs]
+        tgts = [t for _, t in pairs]
+        if len(set(srcs)) != len(srcs) or len(set(tgts)) != len(tgts):
+            return Violation(
+                "replica-groups",
+                "collective-permute repeats a source or target",
+                {"pairs": [list(p) for p in pairs]},
+            )
+        names = self.all_axes
+        axes: set[str] = set()
+        for s, t in pairs:
+            cs, ct = self.coords.get(s), self.coords.get(t)
+            if cs is None or ct is None:
+                return Violation(
+                    "replica-groups",
+                    "permute endpoint outside the mesh",
+                    {"pair": [s, t]},
+                )
+            axes.update(
+                names[d] for d in range(len(names)) if cs[d] != ct[d]
+            )
+        return tuple(a for a in names if a in axes)
+
+
+def check_census(
+    contract, mesh, issued_text: str, hop_pairs=None
+) -> list[Violation]:
+    """Reconcile the issued collectives against the contract's budgets.
+
+    ``hop_pairs`` (``contract.gossip_hop_pairs``) optionally pins permute
+    endpoints to the exponential-graph hop set, beyond axis membership."""
+    resolver = _AxisResolver(mesh)
+    violations: list[Violation] = []
+    observed: dict[tuple[str, tuple[str, ...]], list[dict]] = {}
+    # a permute's pairs reveal only the axes its hop actually crosses: with
+    # the worker id flattened over SEVERAL mesh axes (e.g. worker_axes =
+    # ('pod', 'data')), a power-of-two hop that lands on a pure outer-axis
+    # stride resolves to a strict subset of the budget's axes — fold such
+    # ops into the enclosing permute budget (hop_pairs still pins the exact
+    # endpoints, so this loses no precision)
+    cp_budget_axes = [
+        b.axes for b in contract.budgets if b.op == "collective-permute"
+    ]
+    for rec in hlo.collective_ops(issued_text):
+        if rec["op"] == "collective-permute":
+            axes = resolver.from_pairs(rec["source_target_pairs"])
+            if not isinstance(axes, Violation) and axes not in cp_budget_axes:
+                for ba in cp_budget_axes:
+                    if set(axes) <= set(ba):
+                        axes = ba
+                        break
+            if not isinstance(axes, Violation) and hop_pairs is not None:
+                bad = [
+                    p for p in rec["source_target_pairs"] if p not in hop_pairs
+                ]
+                if bad:
+                    violations.append(
+                        Violation(
+                            "replica-groups",
+                            "permute pair outside the gossip hop set",
+                            {"pairs": [list(p) for p in bad]},
+                        )
+                    )
+        else:
+            axes = resolver.from_groups(rec["replica_groups"])
+        if isinstance(axes, Violation):
+            axes.detail.setdefault("line", rec["line"][:200])
+            violations.append(axes)
+            continue
+        bucket = observed.setdefault((rec["op"], axes), [])
+        for b, d in zip(rec["operand_bytes"], rec["dtypes"]):
+            bucket.append({"bytes": b, "dtype": d, "line": rec["line"][:200]})
+
+    expected: dict[tuple[str, tuple[str, ...]], list[tuple]] = {}
+    for b in contract.budgets:
+        expected.setdefault((b.op, b.axes), []).extend(
+            (s, b.dtype, b.name) for s in b.sizes
+        )
+    allowed: dict[tuple[str, tuple[str, ...]], Any] = {}
+    for a in contract.allowances:
+        for op in a.ops:
+            allowed[(op, a.axes)] = a
+
+    for key in sorted(set(observed) | set(expected)):
+        op, axes = key
+        remaining = list(observed.get(key, []))
+        missing = []
+        for size, dt, name in expected.get(key, []):
+            hit = next(
+                (
+                    o
+                    for o in remaining
+                    if o["bytes"] == size and (dt is None or o["dtype"] == dt)
+                ),
+                None,
+            )
+            if hit is not None:
+                remaining.remove(hit)
+            else:
+                missing.append((size, dt, name))
+        # second pass: same element count at the wrong dtype = promotion
+        for size, dt, name in list(missing):
+            if dt is None:
+                continue
+            esz = _TOKEN_BYTES.get(dt, 0)
+            hit = next(
+                (
+                    o
+                    for o in remaining
+                    if o["dtype"] != dt
+                    and esz
+                    and _TOKEN_BYTES.get(o["dtype"], 0)
+                    and o["bytes"] * esz
+                    == size * _TOKEN_BYTES[o["dtype"]]
+                ),
+                None,
+            )
+            if hit is not None:
+                remaining.remove(hit)
+                missing.remove((size, dt, name))
+                violations.append(
+                    Violation(
+                        "wire-dtype",
+                        f"{name}: {op} over {axes} issued at "
+                        f"{hit['dtype']} instead of {dt}",
+                        {"expected_bytes": size, "observed": hit},
+                    )
+                )
+        for size, dt, name in missing:
+            violations.append(
+                Violation(
+                    "collective-count",
+                    f"{name}: missing {op} over {axes} "
+                    f"({size} B{f', {dt}' if dt else ''})",
+                    {"budget": name, "bytes": size, "dtype": dt},
+                )
+            )
+        allowance = allowed.get(key)
+        for o in remaining:
+            if allowance is not None:
+                if allowance.max_bytes is None or o["bytes"] <= allowance.max_bytes:
+                    continue
+                violations.append(
+                    Violation(
+                        "collective-count",
+                        f"{allowance.name}: {op} over {axes} exceeds the "
+                        f"{allowance.max_bytes} B allowance",
+                        {"observed": o},
+                    )
+                )
+            else:
+                violations.append(
+                    Violation(
+                        "unbudgeted-collective",
+                        f"unexpected {op} over {axes} ({o['bytes']} B, "
+                        f"{o['dtype']})",
+                        {"observed": o},
+                    )
+                )
+    return violations
+
+
+def check_donation(
+    contract, compiled_text: str, leaf_bytes: tuple[int, ...]
+) -> list[Violation]:
+    """Every large new-state output must alias a donated input buffer.
+
+    ``leaf_bytes`` are the state's leaf sizes in flatten order
+    (``state_leaf_bytes``); the round returns ``(new_state, metrics)``, so
+    output index ``i`` of the compiled module IS state leaf ``i``.  The
+    check is output-side on purpose: XLA renumbers (and prunes unused)
+    entry parameters, so ``param_number`` is not stable against the jit
+    flatten order — but an output of a donating jit that appears in no
+    ``input_output_alias`` entry is exactly a fresh allocation where a
+    donated buffer should have been reused."""
+    aliased = {
+        e["output_index"][0]
+        for e in hlo.parse_input_output_alias(compiled_text)
+        if len(e["output_index"]) == 1
+    }
+    violations = []
+    for i, nbytes in enumerate(leaf_bytes):
+        if nbytes >= contract.donate_min_bytes and i not in aliased:
+            violations.append(
+                Violation(
+                    "donation",
+                    f"state output {i} ({nbytes} B) aliases no donated "
+                    "input — the round allocates a fresh buffer for it",
+                    {"leaf": i, "bytes": nbytes},
+                )
+            )
+    return violations
+
+
+def check_constants(contract, compiled_text: str) -> list[Violation]:
+    """No buffer-sized constants may enter the compiled round."""
+    violations = []
+    for c in hlo.constant_defs(compiled_text):
+        if c["bytes"] >= contract.constant_threshold:
+            violations.append(
+                Violation(
+                    "large-constant",
+                    f"{c['name']}: {c['bytes']} B {c['dtype']} constant "
+                    "materialized in the compiled round",
+                    dict(c),
+                )
+            )
+    return violations
+
+
+def audit_round(
+    contract,
+    mesh,
+    issued_text: str,
+    compiled_text: str | None = None,
+    leaf_bytes: tuple[int, ...] | None = None,
+    hop_pairs=None,
+) -> list[Violation]:
+    """Run every applicable rule.  Census rules always run on the issued
+    text; donation and large-constant rules run iff ``compiled_text`` (and,
+    for donation, ``leaf_bytes``) is given."""
+    violations = check_census(contract, mesh, issued_text, hop_pairs=hop_pairs)
+    if compiled_text is not None:
+        if leaf_bytes is not None:
+            violations += check_donation(contract, compiled_text, leaf_bytes)
+        violations += check_constants(contract, compiled_text)
+    return violations
+
+
+def as_report(violations: list[Violation]) -> list[dict[str, Any]]:
+    return [v.as_dict() for v in violations]

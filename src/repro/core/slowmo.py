@@ -530,18 +530,9 @@ def make_slowmo_round(
 # Named presets matching the paper's baselines (Table 1 / App. C).
 # ---------------------------------------------------------------------------
 
-def preset(
-    name: str,
-    num_workers: int,
-    tau: int = 12,
-    beta: float = 0.7,
-    inner: InnerOptConfig | None = None,
-    **kw,
-) -> SlowMoConfig:
-    """Paper baselines by name: '<base>' or '<base>+slowmo' and friends."""
-    inner = inner or InnerOptConfig()
+def _preset_specs(beta: float, inner: InnerOptConfig) -> dict[str, dict]:
     adam = dataclasses.replace(inner, kind="adam")
-    table = {
+    return {
         # base algorithms (no slow momentum: beta=0, alpha=1)
         "local_sgd": dict(base="local", beta=0.0, alpha=1.0),
         "local_adam": dict(base="local", beta=0.0, alpha=1.0, inner=adam),
@@ -564,6 +555,23 @@ def preset(
         ),
         "lookahead": dict(base="local", beta=0.0, alpha=0.5),
     }
+
+
+#: Every named preset, in table order — the audit CLI sweeps this.
+PRESET_NAMES: tuple[str, ...] = tuple(_preset_specs(0.7, InnerOptConfig()))
+
+
+def preset(
+    name: str,
+    num_workers: int,
+    tau: int = 12,
+    beta: float = 0.7,
+    inner: InnerOptConfig | None = None,
+    **kw,
+) -> SlowMoConfig:
+    """Paper baselines by name: '<base>' or '<base>+slowmo' and friends."""
+    inner = inner or InnerOptConfig()
+    table = _preset_specs(beta, inner)
     if name not in table:
         raise KeyError(f"unknown preset {name!r}; have {sorted(table)}")
     spec = dict(num_workers=num_workers, tau=tau, inner=inner)

@@ -1,189 +1,43 @@
-"""HLO analysis: collective-bytes parsing + three-term roofline derivation.
+"""Roofline derivation + compat re-exports of the HLO parsing layer.
+
+The collective/replica-group/alias PARSING that used to live here was
+promoted to ``repro.analysis.hlo`` so the contract auditor
+(``repro.analysis``) owns one copy; this module keeps the hardware model
+and the three-term roofline, and re-exports the parsing names so existing
+imports (`dryrun`, benchmarks, tests) keep working.
 
 ``compiled.cost_analysis()`` gives HLO FLOPs and bytes accessed, but not
 collective traffic — we parse the (post-SPMD-partitioning, per-device) HLO
-text and sum the result sizes of every collective op.  Hardware model:
+text and sum the operand sizes of every collective op.  Hardware model:
 TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (per chip).
 """
 from __future__ import annotations
 
 import dataclasses
-import re
 from typing import Any
 
-import numpy as np
+from repro.analysis.hlo import (  # noqa: F401  (compat re-exports)
+    COLLECTIVE_OPS,
+    _DTYPE_BYTES,
+    _shape_bytes,
+    collective_bytes,
+    collective_ops,
+    constant_defs,
+    lowered_hlo_text,
+    mesh_axis_groups,
+    normalize_groups,
+    parse_input_output_alias,
+    parse_replica_groups,
+    parse_replica_groups as _parse_replica_groups,
+    parse_shapes,
+    parse_source_target_pairs,
+    parse_source_target_pairs as _parse_source_target_pairs,
+)
 
 # v5e per-chip constants
 PEAK_FLOPS = 197e12  # bf16
 HBM_BW = 819e9
 ICI_BW = 50e9
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-COLLECTIVE_OPS = (
-    "all-reduce",
-    "all-gather",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
-)
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[\d, ]*\},?\s*)*)\}")
-_IOTA_GROUPS_RE = re.compile(
-    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
-)
-
-
-def _parse_replica_groups(line: str):
-    """Replica groups of one HLO collective line, as a tuple of id-tuples.
-
-    Handles both textual forms XLA emits: explicit braces
-    (``replica_groups={{0,1},{2,3}}``) and the iota form
-    (``replica_groups=[2,2]<=[4]`` / ``...<=[2,2]T(1,0)``).  Returns ``None``
-    when the line carries no replica_groups attribute, and ``()`` for XLA's
-    empty form ``replica_groups={}``, which means ALL replicas form one
-    group — consumers comparing against ``mesh_axis_groups`` over every mesh
-    axis must treat ``()`` as that full-device group (see the bucketing in
-    tests/test_hierarchical_spmd.py)."""
-    m = _BRACE_GROUPS_RE.search(line)
-    if m:
-        return tuple(
-            tuple(int(x) for x in g.split(",") if x.strip())
-            for g in re.findall(r"\{([\d, ]*)\}", m.group(1))
-        )
-    m = _IOTA_GROUPS_RE.search(line)
-    if m:
-        n_groups, group_size = int(m.group(1)), int(m.group(2))
-        dims = [int(d) for d in m.group(3).split(",")]
-        ids = np.arange(int(np.prod(dims))).reshape(dims)
-        if m.group(4):
-            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
-        return tuple(
-            tuple(int(x) for x in row) for row in ids.reshape(n_groups, group_size)
-        )
-    return None
-
-
-_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?\s*)+)\}")
-
-
-def _parse_source_target_pairs(line: str):
-    """(source, target) device pairs of a collective-permute line, or None."""
-    m = _PAIRS_RE.search(line)
-    if not m:
-        return None
-    return tuple(
-        (int(s), int(t))
-        for s, t in re.findall(r"\{(\d+),(\d+)\}", m.group(1))
-    )
-
-
-def normalize_groups(groups) -> frozenset:
-    """Order-insensitive form of a replica-group list for comparisons (the
-    order of ids within an all-reduce group is semantically irrelevant)."""
-    return frozenset(frozenset(g) for g in groups)
-
-
-def mesh_axis_groups(mesh, axes) -> tuple[tuple[int, ...], ...]:
-    """Expected replica groups (device ids) of a collective reducing over
-    ``axes`` of ``mesh``: one group per slice along the remaining axes.
-
-    This is what lets tests assert the TWO-LEVEL structure of hierarchical
-    layouts — inner-step gradient all-reduces grouped over ``('data',)``
-    only, boundary all-reduces grouped over ``('pod',)`` only — rather than
-    bare op counts."""
-    ids = np.vectorize(lambda d: d.id)(mesh.devices)
-    names = list(mesh.axis_names)
-    red = [names.index(a) for a in axes]
-    keep = [i for i in range(ids.ndim) if i not in red]
-    moved = ids.transpose(keep + red)
-    group_size = int(np.prod([ids.shape[i] for i in red], dtype=np.int64))
-    return tuple(
-        tuple(int(x) for x in row) for row in moved.reshape(-1, group_size)
-    )
-
-
-def collective_ops(hlo_text: str) -> list[dict[str, Any]]:
-    """Every collective op in the HLO text, in program order, with its kind,
-    result bytes, and (for grouped collectives) parsed replica groups.
-
-    The per-op view behind ``collective_bytes``: use this when an assertion
-    needs WHICH devices a collective spans (e.g. the hierarchical layout's
-    data-only gradient sync vs pod-only boundary average), not just totals.
-    ``-start`` async forms are counted; ``-done`` forms carry no new traffic
-    and are skipped."""
-    ops: list[dict[str, Any]] = []
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        if not line or "=" not in line:
-            continue
-        for op in COLLECTIVE_OPS:
-            m = re.search(rf"=\s+(\([^)]*\)|\S+)\s+{op}(?:-start)?\(", line)
-            if m:
-                ops.append(
-                    {
-                        "op": op,
-                        "bytes": _shape_bytes(m.group(1)),
-                        "replica_groups": _parse_replica_groups(line),
-                        "source_target_pairs": _parse_source_target_pairs(line),
-                    }
-                )
-                break
-    return ops
-
-
-def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Sum result bytes of every collective op, per op kind, from HLO text.
-
-    Besides the per-kind byte totals, the result carries two metadata keys
-    (excluded from any ``sum`` by their ``_`` prefix): ``_counts`` — number
-    of ops per kind — and ``_sizes`` — the individual result sizes, which is
-    what lets tests pin "exactly one LARGE all-reduce per round" on the
-    packed flat-buffer path while ignoring scalar loss reductions."""
-    out = {k: 0 for k in COLLECTIVE_OPS}
-    counts = {k: 0 for k in COLLECTIVE_OPS}
-    sizes = {k: [] for k in COLLECTIVE_OPS}
-    for rec in collective_ops(hlo_text):
-        op, b = rec["op"], rec["bytes"]
-        out[op] += b
-        counts[op] += 1
-        sizes[op].append(b)
-    out["_counts"] = counts  # type: ignore[assignment]
-    out["_sizes"] = sizes  # type: ignore[assignment]
-    return out
-
-
-def lowered_hlo_text(lowered) -> str:
-    """Pre-optimization HLO text of a ``jax`` lowered object.
-
-    Collective dtypes appear here as ISSUED by the program.  The optimized
-    (compiled) module is what actually runs, but XLA:CPU's float
-    normalization promotes bf16 all-reduces to f32 there, which would hide
-    the traffic halving of ``average_dtype=bf16`` when benchmarking on the
-    host-CPU mesh; on TPU the bf16 collective survives to the wire."""
-    ir = lowered.compiler_ir(dialect="hlo")
-    return ir.as_hlo_text() if hasattr(ir, "as_hlo_text") else str(ir)
 
 
 @dataclasses.dataclass

@@ -15,7 +15,6 @@ max(|q . n|, e^{-m}).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -368,7 +367,6 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> PyTree:
 
 def decode_step(cfg: ModelConfig, params, cache, tokens):
     x = params["embed"][tokens].astype(cfg.dtype)
-    B = x.shape[0]
     n_super, m_per, tail = _layout(cfg)
     new_cache = dict(cache)
 

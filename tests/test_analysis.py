@@ -1,0 +1,396 @@
+"""The analysis package's parsing + rule layers, without compiling anything.
+
+``repro.analysis.hlo`` is exercised against a hand-written golden HLO
+fixture (``tests/data/golden_round.hlo``) that covers every textual form the
+parsers must handle — brace and iota replica groups, variadic tuple-shaped
+all-reduce, async ``-start``/``-done`` pairs, empty groups, source-target
+pairs, ``input_output_alias``, materialized constants — plus malformed and
+empty input.  The rule engine (``repro.analysis.rules``) runs against a fake
+8-device (2, 4) mesh, so none of this needs placeholder devices or a
+subprocess.  The seam lint runs on purpose-built source snippets.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import contract as contract_mod
+from repro.analysis import hlo, rules
+from repro.analysis.lint import lint_paths
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "data", "golden_round.hlo")
+
+
+class FakeDevice:
+    def __init__(self, i):
+        self.id = i
+
+
+class FakeMesh:
+    """Just enough of ``jax.sharding.Mesh`` for the axis resolver: a (2, 4)
+    ('pod', 'data') device grid with row-major ids 0..7."""
+
+    axis_names = ("pod", "data")
+
+    def __init__(self):
+        self.devices = np.array(
+            [[FakeDevice(p * 4 + d) for d in range(4)] for p in range(2)],
+            dtype=object,
+        )
+
+
+MESH = FakeMesh()
+
+
+def golden_text():
+    with open(GOLDEN, encoding="utf-8") as f:
+        return f.read()
+
+
+class TestParseShapes:
+    def test_plain_and_layout_suffix(self):
+        assert hlo.parse_shapes("f32[64,1024]{1,0}") == [("f32", 262144)]
+
+    def test_scalar(self):
+        assert hlo.parse_shapes("f32[]") == [("f32", 4)]
+
+    def test_variadic_tuple(self):
+        got = hlo.parse_shapes("(f32[64,1024]{1,0}, bf16[48]{0})")
+        assert got == [("f32", 262144), ("bf16", 96)]
+
+    def test_unknown_dtype_skipped(self):
+        assert hlo.parse_shapes("token[]") == []
+        assert hlo.parse_shapes("") == []
+
+
+class TestParseReplicaGroups:
+    def test_brace_form(self):
+        line = "x = f32[4] all-reduce(y), replica_groups={{0,1,2,3},{4,5,6,7}}"
+        assert hlo.parse_replica_groups(line) == ((0, 1, 2, 3), (4, 5, 6, 7))
+
+    def test_iota_form(self):
+        line = "x = f32[4] all-reduce(y), replica_groups=[2,4]<=[8]"
+        assert hlo.parse_replica_groups(line) == ((0, 1, 2, 3), (4, 5, 6, 7))
+
+    def test_iota_transpose_form(self):
+        line = "x = f32[4] all-reduce(y), replica_groups=[4,2]<=[2,4]T(1,0)"
+        assert hlo.parse_replica_groups(line) == (
+            (0, 4), (1, 5), (2, 6), (3, 7),
+        )
+
+    def test_empty_groups_means_all_devices(self):
+        line = "x = f32[] all-reduce(y), replica_groups={}"
+        assert hlo.parse_replica_groups(line) == ()
+
+    def test_absent(self):
+        assert hlo.parse_replica_groups("x = f32[] add(y, z)") is None
+        assert hlo.parse_replica_groups("garbage ][ text") is None
+
+    def test_normalize_is_order_insensitive(self):
+        a = hlo.normalize_groups(((0, 1), (2, 3)))
+        b = hlo.normalize_groups(((3, 2), (1, 0)))
+        assert a == b
+
+
+class TestParsePairs:
+    def test_pairs(self):
+        line = "cp = f32[2] collective-permute(x), source_target_pairs={{0,4},{1,5}}"
+        assert hlo.parse_source_target_pairs(line) == ((0, 4), (1, 5))
+
+    def test_absent(self):
+        assert hlo.parse_source_target_pairs("x = f32[] add(y, z)") is None
+
+
+class TestMeshAxisGroups:
+    def test_inner_axis(self):
+        assert hlo.mesh_axis_groups(MESH, ("data",)) == (
+            (0, 1, 2, 3), (4, 5, 6, 7),
+        )
+
+    def test_outer_axis(self):
+        assert hlo.mesh_axis_groups(MESH, ("pod",)) == (
+            (0, 4), (1, 5), (2, 6), (3, 7),
+        )
+
+    def test_both_axes(self):
+        assert hlo.mesh_axis_groups(MESH, ("pod", "data")) == (
+            (0, 1, 2, 3, 4, 5, 6, 7),
+        )
+
+
+class TestGoldenFixture:
+    def test_collective_census(self):
+        ops = hlo.collective_ops(golden_text())
+        by_kind = {}
+        for o in ops:
+            by_kind.setdefault(o["op"], []).append(o)
+        # 7 all-reduce records: 24, 25, 26, variadic 27, empty-group 28,
+        # async-start 29 (the -done twin must NOT add an 8th), bf16 31
+        assert len(by_kind["all-reduce"]) == 7
+        assert len(by_kind["collective-permute"]) == 2
+        assert len(by_kind["all-gather"]) == 1
+        assert len(by_kind["reduce-scatter"]) == 1
+
+    def test_variadic_operands(self):
+        ops = hlo.collective_ops(golden_text())
+        (var,) = [o for o in ops if len(o["operand_bytes"]) == 2]
+        assert var["operand_bytes"] == (262144, 192)
+        assert var["dtypes"] == ("f32", "f32")
+        assert var["bytes"] == 262144 + 192
+
+    def test_group_forms_agree_with_mesh(self):
+        ops = hlo.collective_ops(golden_text())
+        ars = [o for o in ops if o["op"] == "all-reduce"]
+        data_g = hlo.normalize_groups(hlo.mesh_axis_groups(MESH, ("data",)))
+        pod_g = hlo.normalize_groups(hlo.mesh_axis_groups(MESH, ("pod",)))
+        # brace form (op 24) and plain iota form (op 26) both = data groups
+        assert hlo.normalize_groups(ars[0]["replica_groups"]) == data_g
+        assert hlo.normalize_groups(ars[2]["replica_groups"]) == data_g
+        # transpose iota form (op 25) = pod groups
+        assert hlo.normalize_groups(ars[1]["replica_groups"]) == pod_g
+        # empty form (op 28)
+        assert ars[4]["replica_groups"] == ()
+
+    def test_collective_bytes_sizes(self):
+        cb = hlo.collective_bytes(golden_text())
+        assert cb["_counts"]["all-reduce"] == 7
+        # the variadic op contributes TWO _sizes entries
+        assert len(cb["_sizes"]["all-reduce"]) == 8
+        assert cb["_sizes"]["collective-permute"] == [262144, 8]
+
+    def test_alias_entries(self):
+        entries = hlo.parse_input_output_alias(golden_text())
+        assert [e["output_index"] for e in entries] == [(0,), (1,), (2,)]
+        assert [e["kind"] for e in entries] == [
+            "may-alias", "may-alias", "must-alias",
+        ]
+
+    def test_constants(self):
+        consts = {c["name"]: c for c in hlo.constant_defs(golden_text())}
+        assert consts["%constant.22"]["bytes"] == 32
+        assert consts["%constant.23"]["bytes"] == 262144
+        assert consts["%constant.21"]["dtype"] == "s32"
+
+    def test_empty_and_malformed_input(self):
+        assert hlo.collective_ops("") == []
+        assert hlo.collective_ops("not hlo at all\n= ) ( {") == []
+        assert hlo.parse_input_output_alias("HloModule m\n") == []
+        assert hlo.constant_defs("") == []
+
+
+def make_contract(budgets=(), allowances=(), **kw):
+    return contract_mod.Contract(
+        mesh_axes=("pod", "data"),
+        worker_axes=("pod",),
+        batch_axes=("data",),
+        model_axes=(),
+        budgets=tuple(budgets),
+        allowances=tuple(allowances),
+        **kw,
+    )
+
+
+AR_DATA = (
+    "  %ar = f32[64,1024]{1,0} all-reduce(%x), "
+    "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum\n"
+)
+
+
+class TestCensusRules:
+    def test_exact_match_passes(self):
+        ct = make_contract(
+            [contract_mod.Budget("grad", "all-reduce", ("data",), (262144,), "f32")]
+        )
+        assert rules.check_census(ct, MESH, AR_DATA) == []
+
+    def test_missing_budget(self):
+        ct = make_contract(
+            [
+                contract_mod.Budget("grad", "all-reduce", ("data",), (262144,), "f32"),
+                contract_mod.Budget("boundary", "all-reduce", ("pod",), (262144,), "f32"),
+            ]
+        )
+        (v,) = rules.check_census(ct, MESH, AR_DATA)
+        assert v.rule == "collective-count" and "boundary" in v.message
+
+    def test_unbudgeted_collective(self):
+        (v,) = rules.check_census(make_contract(), MESH, AR_DATA)
+        assert v.rule == "unbudgeted-collective"
+
+    def test_allowance_absorbs(self):
+        ct = make_contract(
+            allowances=[contract_mod.Allowance("loss", ("data",))]
+        )
+        assert rules.check_census(ct, MESH, AR_DATA) == []
+
+    def test_allowance_max_bytes(self):
+        ct = make_contract(
+            allowances=[contract_mod.Allowance("loss", ("data",), max_bytes=1024)]
+        )
+        (v,) = rules.check_census(ct, MESH, AR_DATA)
+        assert v.rule == "collective-count" and "allowance" in v.message
+
+    def test_wire_dtype_promotion(self):
+        # budget says bf16 (131072 B); observed op is f32 with the same
+        # element count — the silent-promotion case
+        ct = make_contract(
+            [contract_mod.Budget("boundary", "all-reduce", ("data",), (131072,), "bf16")]
+        )
+        (v,) = rules.check_census(ct, MESH, AR_DATA)
+        assert v.rule == "wire-dtype" and "f32 instead of bf16" in v.message
+
+    def test_overlapping_groups(self):
+        bad = AR_DATA.replace("{{0,1,2,3},{4,5,6,7}}", "{{0,1,2,3},{3,4,5,6,7}}")
+        violations = rules.check_census(make_contract(), MESH, bad)
+        assert any(
+            v.rule == "replica-groups" and "overlap" in v.message
+            for v in violations
+        )
+
+    def test_noncovering_groups(self):
+        bad = AR_DATA.replace("{{0,1,2,3},{4,5,6,7}}", "{{0,1,2,3}}")
+        violations = rules.check_census(make_contract(), MESH, bad)
+        assert any(
+            v.rule == "replica-groups" and "cover" in v.message
+            for v in violations
+        )
+
+    def test_diagonal_groups_match_no_axis(self):
+        bad = AR_DATA.replace(
+            "{{0,1,2,3},{4,5,6,7}}", "{{0,5,2,7},{4,1,6,3}}"
+        )
+        violations = rules.check_census(make_contract(), MESH, bad)
+        assert any(
+            v.rule == "replica-groups" and "no axis subset" in v.message
+            for v in violations
+        )
+
+    def test_permute_outside_hop_set(self):
+        cp = (
+            "  %cp = f32[8]{0} collective-permute(%x), "
+            "source_target_pairs={{0,4},{1,5},{2,6},{3,7}}\n"
+        )
+        ct = make_contract(
+            [contract_mod.Budget("gossip", "collective-permute", ("pod",), (32,), "f32")]
+        )
+        good = frozenset({(0, 4), (1, 5), (2, 6), (3, 7)})
+        assert rules.check_census(ct, MESH, cp, hop_pairs=good) == []
+        violations = rules.check_census(
+            ct, MESH, cp, hop_pairs=frozenset({(0, 4), (1, 5)})
+        )
+        assert any(
+            v.rule == "replica-groups" and "hop set" in v.message
+            for v in violations
+        )
+
+
+COMPILED = (
+    "HloModule jit_round, input_output_alias={ {0}: (0, {}, may-alias), "
+    "{2}: (1, {}, may-alias) }\n"
+    "  %constant.1 = f32[] constant(2)\n"
+    "  %constant.2 = f32[8192]{0} constant({...})\n"
+)
+
+
+class TestCompiledRules:
+    def test_donation_output_side(self):
+        ct = make_contract(donate_min_bytes=1024)
+        # outputs 0, 2 aliased; leaf 1 is large and unaliased -> violation;
+        # leaf 3 is small -> ignored
+        violations = rules.check_donation(ct, COMPILED, (4096, 4096, 4096, 8))
+        assert [v.detail["leaf"] for v in violations] == [1]
+        assert violations[0].rule == "donation"
+
+    def test_donation_all_aliased(self):
+        ct = make_contract(donate_min_bytes=1024)
+        assert rules.check_donation(ct, COMPILED, (4096, 8, 4096)) == []
+
+    def test_large_constant(self):
+        ct = make_contract(constant_threshold=4096)
+        (v,) = rules.check_constants(ct, COMPILED)
+        assert v.rule == "large-constant" and "%constant.2" in v.message
+
+    def test_constant_threshold(self):
+        ct = make_contract(constant_threshold=1 << 20)
+        assert rules.check_constants(ct, COMPILED) == []
+
+
+CLEAN_SRC = """
+def fn(backend, x):
+    return backend.worker_mean(x)
+"""
+
+DIRTY_SRC = """
+from jax import lax
+
+def fn(x, axis):
+    return lax.psum(x, axis_name="model")
+"""
+
+
+class TestLint:
+    def _lint(self, tmp_path, rel, src):
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+        return lint_paths([str(p)], str(tmp_path))
+
+    def test_clean(self, tmp_path):
+        assert self._lint(tmp_path, "repro/core/x.py", CLEAN_SRC) == []
+
+    def test_raw_collective_and_axis_literal(self, tmp_path):
+        got = self._lint(tmp_path, "repro/core/x.py", DIRTY_SRC)
+        assert sorted(v.rule for v in got) == ["axis-literal", "raw-collective"]
+
+    def test_allowlisted_seam(self, tmp_path):
+        got = self._lint(tmp_path, "repro/core/comm.py", DIRTY_SRC)
+        assert [v.rule for v in got] == ["axis-literal"]  # literal still bad
+
+    def test_worker_primitive_in_models(self, tmp_path):
+        got = self._lint(tmp_path, "repro/models/loss.py", CLEAN_SRC)
+        assert [v.rule for v in got] == ["worker-primitive-in-loss"]
+
+    def test_syntax_error_reported(self, tmp_path):
+        got = self._lint(tmp_path, "repro/core/x.py", "def broken(:\n")
+        assert [v.rule for v in got] == ["syntax"]
+
+    def test_repo_tree_is_clean(self):
+        src = os.path.join(os.path.dirname(HERE), "src")
+        assert lint_paths([os.path.join(src, "repro")], src) == []
+
+
+@pytest.mark.slow
+class TestAuditCLI:
+    """End-to-end CLI: one tiny case clean, one mutated case failing."""
+
+    def _run(self, *args):
+        root = os.path.dirname(HERE)
+        return subprocess.run(
+            [
+                sys.executable, "-m", "repro.analysis.audit",
+                "--presets", "local_sgd+slowmo",
+                "--layouts", "flat", "--packed", "packed", *args,
+            ],
+            capture_output=True,
+            text=True,
+            timeout=600,
+            env={
+                "PYTHONPATH": os.path.join(root, "src"),
+                "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                "JAX_PLATFORMS": "cpu",
+            },
+            cwd=root,
+        )
+
+    def test_clean_case_exits_zero(self):
+        proc = self._run()
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "0 violation(s)" in proc.stdout
+
+    def test_mutated_contract_fails(self):
+        proc = self._run("--mutate", "wire-dtype")
+        assert proc.returncode != 0, proc.stdout + proc.stderr
+        assert "wire-dtype" in proc.stdout

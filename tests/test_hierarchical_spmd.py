@@ -21,8 +21,9 @@ the hierarchical execution path on a (pods=2, data=2) mesh:
   gradient all-reduce whose replica groups span only the ``data`` axis, and
   per round boundary exactly one packed all-reduce whose groups span only
   ``pod``; gossip collective-permutes connect same-data-index devices across
-  pods only.  Asserted on parsed replica groups / source-target pairs
-  (``hlo_analysis.collective_ops``), not op counts alone;
+  pods only.  Asserted through the shared contract auditor
+  (``repro.analysis``): the census derived from the config must reconcile
+  exactly against the lowered HLO's replica groups and permute pairs;
 
 * SPEC UNIFICATION — the GSPMD dry-run path (``sharding.batch_shardings``)
   and the shard_map path (``sharding.spmd_batch_specs``) produce the same
@@ -43,8 +44,9 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contract as contract_mod, hlo, rules
 from repro.core import slowmo, packing
-from repro.distributed import spmd, sharding, hlo_analysis
+from repro.distributed import spmd, sharding
 from repro.launch.mesh import make_hierarchical_layout, make_spmd_layout
 
 assert len(jax.devices()) == 8
@@ -111,13 +113,11 @@ for name, packed, avg in CASES:
     assert abs(float(met_a["loss"]) - float(met_m["loss"])) < loss_tol, (name, packed, avg)
     print("HIER-EQ-OK", name, f"packed={int(packed)}", f"avg={avg or 'f32'}")
 
-# --- two-level collective structure (replica groups, packed layout) --------
-DATA_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(layout.mesh, ("data",)))
-POD_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(layout.mesh, ("pod",)))
-ALL_G = hlo_analysis.normalize_groups(
-    hlo_analysis.mesh_axis_groups(layout.mesh, ("pod", "data")))
-
-def lowered_ops(name, tau):
+# --- two-level collective structure via the shared contract ----------------
+# The Contract derived from (cfg, layout) IS the two-level pin: budgets carry
+# exact (op, axes, bytes, dtype) multisets, and the rule engine reconciles
+# the lowered HLO against them (replica-group axis match, counts, dtypes).
+def audit_structure(name, tau):
     cfg = dataclasses.replace(
         slowmo.preset(name, num_workers=W, tau=tau), packed=True, unroll_inner=True)
     params0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (D,)), "b": jnp.zeros(())}
@@ -125,48 +125,52 @@ def lowered_ops(name, tau):
     state = slowmo.init_slowmo(cfg, params0, pack=pack)
     b = make_batches(0, tau)
     fn = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack).build(state, b)
-    txt = hlo_analysis.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
+    txt = hlo.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
+    ct = contract_mod.round_contract(cfg, layout, pack=pack)
+    hop_pairs = (contract_mod.gossip_hop_pairs(layout, cfg)
+                 if cfg.base in ("sgp", "osgp", "dpsgd") else None)
+    violations = rules.check_census(ct, layout.mesh, txt, hop_pairs=hop_pairs)
+    assert not violations, (name, [v.as_dict() for v in violations[:5]])
     buf_bytes = pack.rows("float32") * packing.LANES * 4
-    return hlo_analysis.collective_ops(txt), buf_bytes
+    return ct, buf_bytes
 
 TAU = 2
-ops, buf_bytes = lowered_ops("local_sgd+slowmo", TAU)
-ars = [o for o in ops if o["op"] == "all-reduce"]
-by_groups = {}
-for o in ars:
-    g = o["replica_groups"]
-    # () is XLA's replica_groups={} form: all devices in one group
-    key = hlo_analysis.normalize_groups(g) if g else ALL_G
-    by_groups.setdefault(key, []).append(o)
+ct, buf_bytes = audit_structure("local_sgd+slowmo", TAU)
+by_name = {}
+for bgt in ct.budgets:
+    by_name.setdefault(bgt.name, []).append(bgt)
 # per inner step exactly ONE gradient all-reduce grouped over 'data' only,
-# each moving the whole packed gradient buffer
-data_ars = by_groups.get(DATA_G, [])
-assert len(data_ars) == TAU, (len(data_ars), TAU)
-assert all(o["bytes"] == buf_bytes for o in data_ars), data_ars
+# moving the whole packed gradient buffer (the census passing above proves
+# the HLO matches; these assert the CONTRACT itself has the two-level shape)
+(grad,) = by_name["pod-grad-sync"]
+assert grad.axes == tuple(layout.batch_axes) and len(grad.sizes) == TAU, grad
+assert all(s == buf_bytes for s in grad.sizes), (grad, buf_bytes)
 # per round boundary exactly ONE packed all-reduce grouped over 'pod' only
-pod_ars = by_groups.get(POD_G, [])
-assert len(pod_ars) == 1, pod_ars
-assert pod_ars[0]["bytes"] == buf_bytes, pod_ars
-# everything else is the scalar loss pmean over ALL devices — no collective
-# may span any other device grouping
-other = {g: o for g, o in by_groups.items() if g not in (DATA_G, POD_G)}
-assert set(other) == {ALL_G}, list(other)
-assert all(o["bytes"] == 4 for o in other[ALL_G]), other[ALL_G]
+(boundary,) = by_name["boundary-average"]
+assert boundary.axes == tuple(layout.worker_axes), boundary
+assert boundary.sizes == (buf_bytes,), (boundary, buf_bytes)
+assert ct.boundary_bytes == buf_bytes
+# everything else is the scalar loss pmean over ALL devices
+(loss_b,) = by_name["loss-pmean"]
+assert set(by_name) == {"pod-grad-sync", "boundary-average", "loss-pmean"}
+assert loss_b.axes == tuple(layout.worker_axes) + tuple(layout.batch_axes)
+assert all(s == 4 for s in loss_b.sizes), loss_b
 print("HIER-HLO-OK all-reduce groups: "
-      f"data x{len(data_ars)}, pod x{len(pod_ars)}, scalar x{len(other[ALL_G])}")
+      f"data x{len(grad.sizes)}, pod x{len(boundary.sizes)}, "
+      f"scalar x{len(loss_b.sizes)}")
 
-# gossip rolls stay pod-level: every collective-permute pair connects
-# same-data-index devices in different pods
-ops_sgp, _ = lowered_ops("sgp+slowmo", TAU)
-cps = [o for o in ops_sgp if o["op"] == "collective-permute"]
-assert cps, "sgp round lowered without collective-permutes"
+# gossip rolls stay pod-level: check_census above pins every collective-
+# permute pair to the exponential-graph hop set, which for this layout is
+# exactly the same-data-index cross-pod pairs — verify that identity here
+ct_sgp, _ = audit_structure("sgp+slowmo", TAU)
+hop_pairs = contract_mod.gossip_hop_pairs(
+    layout, slowmo.preset("sgp+slowmo", num_workers=W, tau=TAU))
 ids = np.vectorize(lambda d: d.id)(layout.mesh.devices)
 pod_pairs = {(int(ids[p, d]), int(ids[(p + 1) % PODS, d]))
              for p in range(PODS) for d in range(DP)}
-for o in cps:
-    assert o["source_target_pairs"] is not None, o
-    assert set(o["source_target_pairs"]) <= pod_pairs, (o, pod_pairs)
-print("HIER-CP-OK", len(cps), "collective-permutes, all pod-level")
+assert set(hop_pairs) == pod_pairs, (sorted(hop_pairs), sorted(pod_pairs))
+assert any(b.op == "collective-permute" for b in ct_sgp.budgets)
+print("HIER-CP-OK gossip permutes pinned to", len(pod_pairs), "pod-level pairs")
 
 # --- one spec rule for both paths (dry-run GSPMD vs shard_map) -------------
 for lay in (layout, make_spmd_layout(8)):

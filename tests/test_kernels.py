@@ -1,6 +1,5 @@
 """Per-kernel allclose tests: Pallas (interpret=True) vs the pure-jnp oracle,
 swept over shapes and dtypes, plus hypothesis property tests on the math."""
-import functools
 
 import jax
 import jax.numpy as jnp

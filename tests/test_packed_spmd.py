@@ -33,8 +33,9 @@ import dataclasses
 import jax, jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contract as contract_mod, hlo, rules
 from repro.core import slowmo, packing
-from repro.distributed import spmd, hlo_analysis
+from repro.distributed import spmd
 from repro.launch.mesh import make_spmd_layout
 
 assert len(jax.devices()) == 8
@@ -59,12 +60,22 @@ params0 = {
 }
 layout = make_spmd_layout(W)
 
-def big_collectives(fn, state, b):
+def audit_census(cfg, fn, state, b, pack=None):
     # pre-optimization HLO: issued collectives with issued dtypes (XLA:CPU's
-    # float normalization rewrites bf16 all-reduces to f32 when optimizing)
+    # float normalization rewrites bf16 all-reduces to f32 when optimizing);
+    # the shared contract pins the exact (op, axes, bytes, dtype) multiset
     lowered = fn.build(state, b).lower(state, b, jnp.float32(0.1))
-    cb = hlo_analysis.collective_bytes(hlo_analysis.lowered_hlo_text(lowered))
-    return cb["_counts"], cb["_sizes"]
+    issued = hlo.lowered_hlo_text(lowered)
+    ct = contract_mod.round_contract(cfg, layout, params0=params0, pack=pack)
+    hop_pairs = (contract_mod.gossip_hop_pairs(layout, cfg)
+                 if cfg.base in ("sgp", "osgp", "dpsgd") else None)
+    violations = rules.check_census(ct, layout.mesh, issued, hop_pairs=hop_pairs)
+    assert not violations, [v.as_dict() for v in violations[:5]]
+    return ct
+
+def big_ar_sizes(ct):
+    return [s for bgt in ct.budgets if bgt.op == "all-reduce"
+            for s in bgt.sizes if s > BIG]
 
 def run_case(name):
     cfg = slowmo.preset(name, num_workers=W, tau=3)
@@ -89,8 +100,10 @@ def run_case(name):
             err_msg=f"{name}: {jax.tree_util.keystr(path)}")
     assert abs(float(met_t["loss"]) - float(met_p["loss"])) < 1e-4, name
 
-    counts, sizes = big_collectives(fn_p, st_p, b)
-    big_ar = [s for s in sizes["all-reduce"] if s > BIG]
+    # the census audit proves the lowered HLO matches the contract exactly;
+    # the assertions below pin the CONTRACT to the packing guarantees
+    ct = audit_census(pcfg, fn_p, st_p, b, pack=spec)
+    big_ar = big_ar_sizes(ct)
     buf_bytes = spec.rows("float32") * packing.LANES * 4
     if name == "ar_sgd":
         # per-step packed gradient all-reduce + the boundary average
@@ -98,11 +111,13 @@ def run_case(name):
     else:
         # EXACTLY ONE large all-reduce: the packed boundary average
         assert len(big_ar) == 1 and big_ar[0] == buf_bytes, (name, big_ar)
-        assert counts["all-reduce"] == 2, (name, counts)  # + scalar loss pmean
+        assert ct.boundary_bytes == buf_bytes, ct.describe()
     if name == "sgp+slowmo":
         # one buffer + one w scalar per static hop branch (3 hops for W=8),
         # NOT one per parameter leaf (would be 4 per branch)
-        assert counts["collective-permute"] == 6, counts
+        n_cp = sum(len(bgt.sizes) for bgt in ct.budgets
+                   if bgt.op == "collective-permute")
+        assert n_cp == 6, ct.describe()
     print("PACKED-SPMD-OK", name, "big-ar:", big_ar)
 """
 
@@ -113,8 +128,8 @@ cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=3)
 fn_tm = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout)
 st_tm = slowmo.init_slowmo(cfg, params0)
 b = make_batches(0, cfg.tau)
-counts_t, sizes_t = big_collectives(fn_tm, st_tm, b)
-assert sum(1 for s in sizes_t["all-reduce"] if s > BIG) == 2, sizes_t
+ct_t = audit_census(cfg, fn_tm, st_tm, b)
+assert len(big_ar_sizes(ct_t)) == 2, ct_t.describe()  # the two matrix leaves
 print("ALL-OK")
 """
 
@@ -122,7 +137,9 @@ SWEEP_CASES = r"""
 run_case("sgp+slowmo")
 run_case("ar_sgd")
 
-# bf16 boundary collective: the one large all-reduce halves its bytes
+# bf16 boundary collective: the one large all-reduce halves its bytes — the
+# census audit passing at each dtype proves the ISSUED wire dtype matches
+# (the contract would report wire-dtype if bf16 were silently promoted)
 cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2)
 recs = {}
 for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
@@ -131,8 +148,8 @@ for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
     st = slowmo.init_slowmo(pcfg, params0, pack=spec)
     fn = spmd.make_spmd_slowmo_round(pcfg, loss_fn, layout, pack=spec)
     b = make_batches(0, pcfg.tau)
-    _, sizes = big_collectives(fn, st, b)
-    recs[key] = [s for s in sizes["all-reduce"] if s > BIG]
+    ct = audit_census(pcfg, fn, st, b, pack=spec)
+    recs[key] = big_ar_sizes(ct)
 assert len(recs["f32"]) == len(recs["bf16"]) == 1
 assert recs["bf16"][0] * 2 == recs["f32"][0], recs
 print("PACKED-BF16-OK", recs)
@@ -148,8 +165,10 @@ for avg, key in ((None, "f32"), (jnp.bfloat16, "bf16")):
     st = slowmo.init_slowmo(pcfg, jax.tree.map(jnp.array, params0), pack=spec)
     fn = spmd.make_spmd_slowmo_round(pcfg, loss_fn, layout, pack=spec)
     b = make_batches(0, pcfg.tau)
-    _, sizes = big_collectives(fn, st, b)
-    cps[key] = sorted(s for s in sizes["collective-permute"] if s > BIG)
+    ct = audit_census(pcfg, fn, st, b, pack=spec)
+    cps[key] = sorted(s for bgt in ct.budgets
+                      if bgt.op == "collective-permute"
+                      for s in bgt.sizes if s > BIG)
 assert len(cps["f32"]) == len(cps["bf16"]) > 0, cps
 assert [2 * s for s in cps["bf16"]] == cps["f32"], cps
 print("GOSSIP-BF16-OK", cps)

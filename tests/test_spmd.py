@@ -27,8 +27,9 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.analysis import contract as contract_mod, hlo, rules
 from repro.core import slowmo
-from repro.distributed import spmd, hlo_analysis
+from repro.distributed import spmd
 from repro.launch.mesh import WorkerLayout, make_spmd_layout
 
 assert len(jax.devices()) == 8
@@ -80,9 +81,19 @@ for name, overrides, layout in CASES:
     for key in met_a:
         assert abs(float(met_a[key]) - float(met_m[key])) < 1e-4, (name, key)
 
-    txt = (fn_m.build(state_m, b)
-           .lower(state_m, b, jnp.float32(0.1)).compile().as_text())
-    counts = hlo_analysis.collective_bytes(txt)["_counts"]
+    # full contract audit: census, replica groups, wire dtype, gossip hop
+    # endpoints, donation, constants — derived from the config, not ad hoc
+    lowered = fn_m.build(state_m, b).lower(state_m, b, jnp.float32(0.1))
+    issued = hlo.lowered_hlo_text(lowered)
+    compiled = lowered.compile().as_text()
+    ct = contract_mod.round_contract(cfg, layout, params0=params0)
+    hop_pairs = (contract_mod.gossip_hop_pairs(layout, cfg)
+                 if cfg.base in ("sgp", "osgp", "dpsgd") else None)
+    violations = rules.audit_round(
+        ct, layout.mesh, issued, compiled_text=compiled,
+        leaf_bytes=rules.state_leaf_bytes(state_m), hop_pairs=hop_pairs)
+    assert not violations, (name, [v.as_dict() for v in violations[:5]])
+    counts = hlo.collective_bytes(issued)["_counts"]
     if cfg.exact_average or cfg.base == "ar":
         assert counts["all-reduce"] > 0, name
     if cfg.base in ("sgp", "osgp", "dpsgd"):

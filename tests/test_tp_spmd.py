@@ -38,8 +38,9 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contract as contract_mod, hlo, rules
 from repro.core import slowmo, packing
-from repro.distributed import spmd, sharding, hlo_analysis
+from repro.distributed import spmd, sharding
 from repro.launch.mesh import make_hierarchical_layout
 from repro.models import tp as tp_lib
 
@@ -151,69 +152,74 @@ def hlo_loss_factory(backend):
 hlo_loss = tp_lib.TPLoss(hlo_loss_factory)
 
 MESH = tp_layout.mesh
-DATA_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("data",)))
-POD_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("pod",)))
-MODEL_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("model",)))
-SCALAR_G = hlo_analysis.normalize_groups(hlo_analysis.mesh_axis_groups(MESH, ("pod", "data")))
-ALL_G = hlo_analysis.normalize_groups(
-    hlo_analysis.mesh_axis_groups(MESH, ("pod", "data", "model")))
 
-def lowered_ops(name, tau):
+def audit_structure(name, tau, max_model_bytes=None):
     cfg = dataclasses.replace(
         slowmo.preset(name, num_workers=W, tau=tau), packed=True, unroll_inner=True)
     pk = slowmo.make_state_pack_spec(cfg, hlo_params, layout=tp_layout)
     state = slowmo.init_slowmo(cfg, jax.tree.map(jnp.array, hlo_params), pack=pk)
     b = make_batches(0, tau, DH, DH)
     fn = spmd.make_spmd_slowmo_round(cfg, hlo_loss, tp_layout, pack=pk).build(state, b)
-    txt = hlo_analysis.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
-    return hlo_analysis.collective_ops(txt), pk
+    txt = hlo.lowered_hlo_text(fn.lower(state, b, jnp.float32(0.1)))
+    ct = contract_mod.round_contract(
+        cfg, tp_layout, pack=pk, model_collective_max_bytes=max_model_bytes)
+    hop_pairs = (contract_mod.gossip_hop_pairs(tp_layout, cfg)
+                 if cfg.base in ("sgp", "osgp", "dpsgd") else None)
+    violations = rules.check_census(ct, MESH, txt, hop_pairs=hop_pairs)
+    assert not violations, (name, [v.as_dict() for v in violations[:5]])
+    return ct, pk, txt
 
 TAU = 2
-ops, pk = lowered_ops("local_sgd+slowmo", TAU)
+ct, pk, txt = audit_structure("local_sgd+slowmo", TAU)
 shard_bytes = pk.shard.rows("float32") * packing.LANES * 4
 full_bytes = slowmo.make_state_pack_spec(
     dataclasses.replace(slowmo.preset("local_sgd+slowmo", num_workers=W), packed=True),
     hlo_params).rows("float32") * packing.LANES * 4
 assert 2 * shard_bytes == full_bytes, (shard_bytes, full_bytes)  # bytes ∝ 1/TP
 
-ars = [o for o in ops if o["op"] == "all-reduce"]
-by_groups = {}
-for o in ars:
-    g = o["replica_groups"]
-    # () is XLA's replica_groups={} form: all devices in one group
-    key = hlo_analysis.normalize_groups(g) if g else ALL_G
-    by_groups.setdefault(key, []).append(o)
+# the census passing above proves the HLO matches the contract; these pin the
+# CONTRACT to the three-level shape (axes + local-shard bytes)
+by_name = {}
+for bgt in ct.budgets:
+    by_name.setdefault(bgt.name, []).append(bgt)
+assert set(by_name) == {"pod-grad-sync", "boundary-average", "loss-pmean"}
 # per inner step ONE packed gradient all-reduce over 'data' only, moving the
 # LOCAL SHARD buffer
-data_ars = by_groups.get(DATA_G, [])
-assert len(data_ars) == TAU, (len(data_ars), TAU)
-assert all(o["bytes"] == shard_bytes for o in data_ars), data_ars
+(grad,) = by_name["pod-grad-sync"]
+assert grad.axes == ("data",) and len(grad.sizes) == TAU, grad
+assert all(s == shard_bytes for s in grad.sizes), (grad, shard_bytes)
 # per boundary ONE packed all-reduce over 'pod' only, local shard buffer
-pod_ars = by_groups.get(POD_G, [])
-assert len(pod_ars) == 1 and pod_ars[0]["bytes"] == shard_bytes, pod_ars
-# the loss's model-axis psums: grouped over 'model' ONLY, activation-sized
-model_ars = by_groups.get(MODEL_G, [])
-assert len(model_ars) == TAU, model_ars  # one row-parallel psum per step
-assert all(o["bytes"] < shard_bytes for o in model_ars), model_ars
-# nothing else but the scalar loss pmean over (pod, data)
-other = {g: o for g, o in by_groups.items() if g not in (DATA_G, POD_G, MODEL_G)}
-assert set(other) == {SCALAR_G}, list(other)
-assert all(o["bytes"] == 4 for o in other[SCALAR_G]), other[SCALAR_G]
-print("TP-HLO-OK all-reduce groups: "
-      f"data x{len(data_ars)}, pod x{len(pod_ars)}, model x{len(model_ars)}, "
-      f"scalar x{len(other[SCALAR_G])}; boundary {shard_bytes} B = full/{TP}")
+(boundary,) = by_name["boundary-average"]
+assert boundary.axes == ("pod",) and boundary.sizes == (shard_bytes,), boundary
+assert ct.boundary_bytes == shard_bytes == full_bytes // TP
+# the loss's model-axis psums land in the tp-loss allowance: re-census with
+# the allowance capped below the shard buffer — they must be activation-sized
+(allowance,) = ct.allowances
+assert allowance.axes == ("model",), allowance
+violations = rules.check_census(
+    contract_mod.round_contract(
+        dataclasses.replace(
+            slowmo.preset("local_sgd+slowmo", num_workers=W, tau=TAU),
+            packed=True, unroll_inner=True),
+        tp_layout, pack=pk, model_collective_max_bytes=shard_bytes - 1),
+    MESH, txt)
+assert not violations, [v.as_dict() for v in violations[:5]]
+print("TP-HLO-OK all-reduce budgets: "
+      f"data x{len(grad.sizes)}, pod x{len(boundary.sizes)}, "
+      f"model allowance capped; boundary {shard_bytes} B = full/{TP}")
 
-# gossip permutes stay pod-level: pairs connect same-(data, model) devices
-ops_sgp, _ = lowered_ops("sgp+slowmo", TAU)
-cps = [o for o in ops_sgp if o["op"] == "collective-permute"]
-assert cps, "sgp TP round lowered without collective-permutes"
+# gossip permutes stay pod-level: check_census pins every permute pair to the
+# hop set, which on this mesh is exactly the same-(data, model)-index
+# cross-pod pairs — verify that identity
+ct_sgp, _, _ = audit_structure("sgp+slowmo", TAU)
+hop_pairs = contract_mod.gossip_hop_pairs(
+    tp_layout, slowmo.preset("sgp+slowmo", num_workers=W, tau=TAU))
 ids = np.vectorize(lambda d: d.id)(MESH.devices)
 pod_pairs = {(int(ids[p, d, m]), int(ids[(p + 1) % PODS, d, m]))
              for p in range(PODS) for d in range(DP) for m in range(TP)}
-for o in cps:
-    assert o["source_target_pairs"] is not None, o
-    assert set(o["source_target_pairs"]) <= pod_pairs, (o, pod_pairs)
-print("TP-CP-OK", len(cps), "collective-permutes, all pod-level")
+assert set(hop_pairs) == pod_pairs, (sorted(hop_pairs), sorted(pod_pairs))
+assert any(b.op == "collective-permute" for b in ct_sgp.budgets)
+print("TP-CP-OK gossip permutes pinned to", len(pod_pairs), "pod-level pairs")
 
 # --- one rule, both paths ---------------------------------------------------
 cfg_t = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=2)

@@ -46,6 +46,7 @@ import dataclasses
 import jax, jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contract as contract_mod, hlo, rules
 from repro.configs.base import ModelConfig
 from repro.core import slowmo, packing
 from repro.core.base_opt import InnerOptConfig
@@ -124,6 +125,20 @@ assert_state_close("swiglu tree", st_noclip_tp, st_or)
 assert abs(float(met_tp["loss"]) - float(met_or["loss"])) < 1e-5
 print("SWIGLU-TP-OK")
 
+# --- contract audit of the REAL transformer round on the TP mesh -----------
+# issued-HLO census only (no extra compile): every worker/batch-axis
+# collective must match the config-derived budget exactly; the swiglu loss's
+# model-axis reductions land in the tp-loss allowance
+params0 = build_model(CFG).init(jax.random.PRNGKey(0))
+st_audit = slowmo.init_slowmo(smcfg, jax.tree.map(jnp.array, params0))
+fn_audit = spmd.make_spmd_slowmo_round(smcfg, tp_lib.make_tp_loss(CFG), tp_layout)
+b_audit = model_batches(CFG, 0, smcfg.tau)
+lowered = fn_audit.build(st_audit, b_audit).lower(st_audit, b_audit, jnp.float32(0.05))
+ct = contract_mod.round_contract(smcfg, tp_layout, params0=params0)
+violations = rules.check_census(ct, tp_layout.mesh, hlo.lowered_hlo_text(lowered))
+assert not violations, [v.as_dict() for v in violations[:5]]
+print("TP-CONTRACT-OK", ct.boundary_bytes)
+
 # --- audio model: masked vocab-parallel CE on sharded cls_head logits ------
 st_tp, met_tp = run_rounds(CFG_AUDIO, smcfg, tp_layout, False)
 st_or, met_or = run_rounds(CFG_AUDIO, smcfg, or_layout, False)
@@ -188,6 +203,7 @@ def test_unified_pipeline_tp_equivalence_and_clip_drift():
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ALL-OK" in proc.stdout
     assert "SWIGLU-TP-OK" in proc.stdout
+    assert "TP-CONTRACT-OK" in proc.stdout
     assert "AUDIO-MASKED-CE-TP-OK" in proc.stdout
     assert proc.stdout.count("TP-CLIP-DRIFT-OK") == 2
     assert "TP-CLIP-BINDS-OK" in proc.stdout
