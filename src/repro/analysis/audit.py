@@ -22,6 +22,9 @@ mutated case and asserts a nonzero exit):
                           observed loss all-reduce has no home
 * ``donation``          — a phantom state leaf that no output can alias
 * ``large-constant``    — the constant threshold drops to 1 byte
+* ``masked-average``    — the ``mask-psum`` budget is dropped, so the
+                          masked average's participation-weight all-reduce
+                          has no home (needs ``--masked masked``)
 
 The module must be imported before jax configures a backend: it pins
 ``JAX_PLATFORMS=cpu`` (libtpu would probe for accelerators) and forces 8
@@ -58,6 +61,7 @@ MUTATIONS = (
     "unbudgeted-collective",
     "donation",
     "large-constant",
+    "masked-average",
 )
 
 _BATCH = 4
@@ -166,6 +170,13 @@ def _mutate_contract(contract, leaf_bytes, mutation):
         leaf_bytes = leaf_bytes + (1 << 20,)
     elif mutation == "large-constant":
         contract = dataclasses.replace(contract, constant_threshold=1)
+    elif mutation == "masked-average":
+        contract = dataclasses.replace(
+            contract,
+            budgets=tuple(
+                b for b in contract.budgets if b.name != "mask-psum"
+            ),
+        )
     else:
         raise ValueError(f"unknown mutation {mutation!r}; have {MUTATIONS}")
     return contract, leaf_bytes
@@ -177,13 +188,24 @@ def audit_case(
     packed: bool,
     tau: int = 2,
     mutation: str | None = None,
-) -> dict:
-    """Lower + compile one round and audit it; returns a JSON-able record."""
+    masked: bool = False,
+) -> dict | None:
+    """Lower + compile one round and audit it; returns a JSON-able record.
+
+    ``masked=True`` audits the elastic straggler path
+    (``cfg.masked_average``, full-participation mask as a traced input) —
+    the contract then budgets the extra ``mask-psum`` all-reduce.  Presets
+    without an exact average have no masked variant; those cases return
+    ``None`` and are skipped."""
     layout = _make_layout(layout_kind)
     problem = _tp_problem() if layout_kind == "tp" else _dense_problem()
     loss_fn, params0, make_batches = problem
 
     cfg = slowmo.preset(preset_name, num_workers=layout.num_workers, tau=tau)
+    if masked:
+        if not cfg.exact_average:
+            return None
+        cfg = dataclasses.replace(cfg, masked_average=True)
     pack = None
     if packed:
         cfg = dataclasses.replace(cfg, packed=True)
@@ -192,7 +214,10 @@ def audit_case(
     batches = make_batches(cfg.tau, layout.num_workers)
 
     fn = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout, pack=pack)
-    lowered = fn.build(state, batches).lower(state, batches, jnp.float32(0.1))
+    mask_args = (jnp.ones((cfg.num_workers,), jnp.float32),) if masked else ()
+    lowered = fn.build(state, batches).lower(
+        state, batches, jnp.float32(0.1), *mask_args
+    )
     issued = hlo.lowered_hlo_text(lowered)
     compiled = lowered.compile().as_text()
 
@@ -217,6 +242,7 @@ def audit_case(
         "preset": preset_name,
         "layout": layout_kind,
         "packed": packed,
+        "masked": masked,
         "tau": cfg.tau,
         "boundary_bytes": contract.boundary_bytes,
         "n_collectives": len(hlo.collective_ops(issued)),
@@ -256,6 +282,13 @@ def main(argv: list[str] | None = None) -> int:
         choices=["packed", "tree", "both"],
         help="state layout(s) to audit",
     )
+    parser.add_argument(
+        "--masked",
+        default="unmasked",
+        choices=["masked", "unmasked", "both"],
+        help="also audit the elastic straggler path (masked_average=True, "
+        "full-participation mask input); exact-average presets only",
+    )
     parser.add_argument("--tau", type=int, default=2, help="inner steps")
     parser.add_argument(
         "--mutate",
@@ -278,35 +311,45 @@ def main(argv: list[str] | None = None) -> int:
         "tree": [False],
         "both": [False, True],
     }[args.packed]
+    maskings = {
+        "masked": [True],
+        "unmasked": [False],
+        "both": [False, True],
+    }[args.masked]
 
     cases = []
     total = 0
     for layout_kind in layouts:
         for preset_name in presets:
             for packed in packings:
-                case = audit_case(
-                    preset_name,
-                    layout_kind,
-                    packed,
-                    tau=args.tau,
-                    mutation=args.mutate,
-                )
-                cases.append(case)
-                n = len(case["violations"])
-                total += n
-                if not args.json:
-                    tag = (
-                        f"{layout_kind:12s} {preset_name:24s} "
-                        f"{'packed' if packed else 'tree':6s}"
+                for masked in maskings:
+                    case = audit_case(
+                        preset_name,
+                        layout_kind,
+                        packed,
+                        tau=args.tau,
+                        mutation=args.mutate,
+                        masked=masked,
                     )
-                    status = "ok" if n == 0 else f"FAIL ({n})"
-                    print(
-                        f"{status:9s} {tag} "
-                        f"boundary={case['boundary_bytes']}B "
-                        f"collectives={case['n_collectives']}"
-                    )
-                    for v in case["violations"][:8]:
-                        print(f"    {v['rule']}: {v['message']}")
+                    if case is None:  # preset has no exact average to mask
+                        continue
+                    cases.append(case)
+                    n = len(case["violations"])
+                    total += n
+                    if not args.json:
+                        tag = (
+                            f"{layout_kind:12s} {preset_name:24s} "
+                            f"{'packed' if packed else 'tree':6s} "
+                            f"{'masked' if masked else '':6s}"
+                        )
+                        status = "ok" if n == 0 else f"FAIL ({n})"
+                        print(
+                            f"{status:9s} {tag} "
+                            f"boundary={case['boundary_bytes']}B "
+                            f"collectives={case['n_collectives']}"
+                        )
+                        for v in case["violations"][:8]:
+                            print(f"    {v['rule']}: {v['message']}")
 
     report = {
         "mutation": args.mutate,

@@ -27,6 +27,10 @@ The derivation mirrors the round body (``core.slowmo`` / ``core.gossip`` /
 * the boundary exact average (Algorithm 1 line 6) is one all-reduce per
   state buffer over the WORKER axes only, at ``average_dtype`` (f32 when
   unset) — on packed state that is ONE buffer per dtype group;
+* ``masked_average`` (the elastic straggler mask) adds exactly ONE extra
+  4-byte f32 all-reduce over the worker axes per boundary — the
+  participation-weight sum the masked ``worker_mean`` divides by
+  (``mask-psum``);
 * ``buffer_strategy='average'`` adds one all-reduce per momentum buffer
   (plus second moments under Adam) over worker+batch axes;
 * ``track_drift`` adds a second worker-mean of the params, a 4-byte worker
@@ -286,6 +290,10 @@ def round_contract(
             tuple(u * avg_size for u in units),
             avg_name,
         )
+        # elastic straggler mask: the masked worker_mean sums the
+        # participation weights once per boundary (comm.MeshBackend)
+        if getattr(cfg, "masked_average", False):
+            add("mask-psum", "all-reduce", wax, (4,), "f32")
 
     # buffer strategy 'average': momentum (+ Adam second moment) all-reduce
     if cfg.buffer_strategy == "average":

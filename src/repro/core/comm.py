@@ -145,17 +145,37 @@ class AxisBackend:
         """This device's position along the model axes (vocab offsets)."""
         return 0
 
-    def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
+    def worker_mean(self, tree: PyTree, dtype=None, mask=None) -> PyTree:
         """Exact average over the worker axis; drops the leading axis.
 
         ``dtype`` controls the precision OF THE COLLECTIVE (a §Perf knob:
-        bf16 halves boundary traffic); the result is fp32 either way."""
+        bf16 halves boundary traffic); the result is fp32 either way.
 
-        def avg(x):
+        ``mask`` (optional, shape ``(num_workers,)``, float) is the per-round
+        PARTICIPATION vector: the weighted mean ``sum_i mask_i x_i / sum_i
+        mask_i`` drops masked-out (straggler) contributions from the exact
+        average.  It is a runtime INPUT, not a compile-time constant, so
+        changing masks never recompiles; an all-ones mask is bit-identical
+        to the unmasked path.  At least one entry must be nonzero — the
+        elastic coordinator guarantees this."""
+        if mask is None:
+
+            def avg(x):
+                acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+                return jnp.mean(acc, axis=0).astype(jnp.float32)
+
+            return jax.tree.map(avg, tree)
+
+        wsum = jnp.sum(mask.astype(jnp.float32))
+
+        def avg_masked(x):
             acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
-            return jnp.mean(acc, axis=0).astype(jnp.float32)
+            m = mask.astype(acc.dtype).reshape(mask.shape + (1,) * (acc.ndim - 1))
+            return (jnp.sum(acc * m, axis=0) / wsum.astype(acc.dtype)).astype(
+                jnp.float32
+            )
 
-        return jax.tree.map(avg, tree)
+        return jax.tree.map(avg_masked, tree)
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         """Every worker slot replaced by the mean; shape preserved."""
@@ -288,16 +308,35 @@ class MeshBackend:
             return 0
         return jax.lax.axis_index(self.model_entry)
 
-    def worker_mean(self, tree: PyTree, dtype=None) -> PyTree:
-        def avg(x):
-            acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
-            # local mean over the (equal-size) local worker axis, then the
-            # cross-device mean — lowers to an all-reduce over the mesh axes.
-            return jax.lax.pmean(jnp.mean(acc, axis=0), self.axis_entry).astype(
-                jnp.float32
-            )
+    def worker_mean(self, tree: PyTree, dtype=None, mask=None) -> PyTree:
+        if mask is None:
 
-        return jax.tree.map(avg, tree)
+            def avg(x):
+                acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+                # local mean over the (equal-size) local worker axis, then the
+                # cross-device mean — lowers to an all-reduce over the mesh
+                # axes.
+                return jax.lax.pmean(jnp.mean(acc, axis=0), self.axis_entry).astype(
+                    jnp.float32
+                )
+
+            return jax.tree.map(avg, tree)
+
+        # ``mask`` enters the shard_map body as the LOCAL (local_workers,)
+        # slice of the global participation vector.  The participant count is
+        # ONE extra 4-byte scalar all-reduce per boundary (budgeted by the
+        # contract as ``mask-psum``); the per-leaf weighted sums reuse the
+        # same all-reduce the unmasked pmean would issue, at the same wire
+        # dtype — so straggler tolerance costs one scalar collective.
+        wsum = jax.lax.psum(jnp.sum(mask.astype(jnp.float32)), self.axis_entry)
+
+        def avg_masked(x):
+            acc = x.astype(dtype) if dtype is not None else x.astype(jnp.float32)
+            m = mask.astype(acc.dtype).reshape(mask.shape + (1,) * (acc.ndim - 1))
+            num = jax.lax.psum(jnp.sum(acc * m, axis=0), self.axis_entry)
+            return (num / wsum.astype(num.dtype)).astype(jnp.float32)
+
+        return jax.tree.map(avg_masked, tree)
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         # worker AND batch axes in ONE collective: for AR gradient averaging

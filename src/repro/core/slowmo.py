@@ -78,6 +78,11 @@ class SlowMoConfig:
     packed: bool = False  # flat-buffer state: one kernel launch / collective
     # per boundary instead of one per leaf (see core/packing.py); requires a
     # PackSpec threaded through init_slowmo / make_slowmo_round.
+    masked_average: bool = False  # the round takes a per-round participation
+    # mask (W,) as a RUNTIME input and line 6 becomes the weighted mean over
+    # the unmasked workers (straggler tolerance; see comm.worker_mean).  An
+    # all-ones mask is bit-identical to the unmasked round, and changing the
+    # mask never recompiles.  Requires exact_average.
 
     def __post_init__(self):
         if self.base not in BASES:
@@ -86,6 +91,11 @@ class SlowMoConfig:
             raise ValueError(f"unknown buffer strategy: {self.buffer_strategy!r}")
         if self.num_workers < 1 or self.tau < 1:
             raise ValueError("num_workers and tau must be >= 1")
+        if self.masked_average and not self.exact_average:
+            raise ValueError(
+                "masked_average masks the line-6 exact average; it has no "
+                "meaning under exact_average=False (noaverage)"
+            )
 
     @property
     def gossip_config(self) -> GossipConfig:
@@ -301,13 +311,20 @@ def outer_update(
     state: SlowMoState,
     lr,
     backend: comm.CommBackend | None = None,
+    mask=None,
 ) -> SlowMoState:
     """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2).
 
     This code is layout-agnostic: on packed state every tree here has ~one
     leaf per dtype group, so line 6 lowers to a single all-reduce and the
     fused lines-7-8 kernel runs as a single ``pallas_call`` over the whole
-    buffer (the packed rows are block-aligned — no pad copies)."""
+    buffer (the packed rows are block-aligned — no pad copies).
+
+    ``mask`` (iff ``cfg.masked_average``) is the per-round participation
+    vector: line 6 becomes the weighted mean over unmasked workers, so a
+    straggler's stale contribution drops out; everything downstream (slow
+    momentum, broadcast, buffer strategy) is unchanged and the broadcast
+    hands the straggler the fresh averaged iterate — automatic catch-up."""
     from ..kernels import ops as kops  # local import: kernels are optional
 
     backend = backend or comm.AxisBackend(cfg.num_workers)
@@ -315,10 +332,12 @@ def outer_update(
         # Line 6: exact average over the worker axis -> all-reduce.
         if cfg.gossip_config.kind in ("sgp", "osgp"):
             x_tau = backend.worker_mean(
-                gossip.debias(state.params, state.gossip.w), cfg.average_dtype
+                gossip.debias(state.params, state.gossip.w),
+                cfg.average_dtype,
+                mask=mask,
             )
         else:
-            x_tau = backend.worker_mean(state.params, cfg.average_dtype)
+            x_tau = backend.worker_mean(state.params, cfg.average_dtype, mask=mask)
     else:
         # noaverage (§6): skip line 6; each worker applies the slow update
         # to its own drift (outer state carries the worker axis).
@@ -384,7 +403,12 @@ def make_slowmo_round(
 
     ``round_fn(state, batches, lr) -> (state, metrics)`` where every leaf of
     ``batches`` is shaped ``(tau, W, ...)`` and ``lr`` is the (fast) learning
-    rate gamma_t used for all tau steps of this round.
+    rate gamma_t used for all tau steps of this round.  With
+    ``cfg.masked_average`` the signature grows a fourth positional input —
+    ``round_fn(state, batches, lr, mask)`` with ``mask`` the float ``(W,)``
+    participation vector fed to the line-6 weighted average (a traced input:
+    no recompile across masks; the drift metric and buffer averaging stay
+    unmasked — they are diagnostics/strategy over the full slot set).
 
     ``backend`` selects how worker collectives execute: the default
     ``AxisBackend`` runs them on the leading array axis; a ``MeshBackend``
@@ -455,7 +479,7 @@ def make_slowmo_round(
         sq_fn=clip_sq_fn,
     )
 
-    def round_fn(state: SlowMoState, batches: PyTree, lr):
+    def _round(state: SlowMoState, batches: PyTree, lr, mask):
         lr = jnp.asarray(lr, jnp.float32)
 
         def body(k, acc):
@@ -520,8 +544,18 @@ def make_slowmo_round(
             per_worker = base_opt.make_grad_sq_fn(backend, drift_mask)(diff)
             drift = backend.worker_psum_scalar(jnp.sum(per_worker))
             metrics["drift"] = drift / cfg.num_workers
-        state = outer_update(cfg, state, lr, backend)
+        state = outer_update(cfg, state, lr, backend, mask=mask)
         return state, metrics
+
+    if cfg.masked_average:
+
+        def round_fn(state: SlowMoState, batches: PyTree, lr, mask):
+            return _round(state, batches, lr, jnp.asarray(mask, jnp.float32))
+
+    else:
+
+        def round_fn(state: SlowMoState, batches: PyTree, lr):
+            return _round(state, batches, lr, None)
 
     return round_fn
 

@@ -9,42 +9,79 @@ is column-stochastic with entries 1/2 (keep half the mass, push half).
 On a TPU mesh the worker axis is a (sharded) leading array axis, so "receive
 from the peer `hop` behind" is ``jnp.roll(x, +hop, axis=0)``, which GSPMD
 lowers to a ``collective-permute``.
+
+**Dynamic worker sets.**  Every function here takes either an int ``m``
+(the classic fixed set ``0..m-1``) or an explicit *ordered survivor list* of
+distinct worker ids (what remains after an elastic eviction — e.g.
+``[0, 1, 3]`` after worker 2 dies).  Hops, phases and mixing matrices depend
+only on the COUNT of survivors and are indexed by *position* in the ordered
+list; ``ppermute_perm`` emits (source, dest) pairs over the actual ids, so
+the rebuilt gossip graph is the exponential graph *of the surviving set*.
 """
 from __future__ import annotations
 
 import math
+from typing import Sequence, Union
 
 import numpy as np
 import jax.numpy as jnp
 
+WorkerSpec = Union[int, Sequence[int]]
 
-def num_hop_phases(m: int) -> int:
+
+def worker_order(workers: WorkerSpec) -> tuple[int, ...]:
+    """Normalize a worker spec to an ordered tuple of distinct ids.
+
+    An int ``m`` means the implicit full set ``(0, .., m-1)``; a sequence is
+    an explicit ordered survivor list (ids need not be contiguous, but must
+    be distinct and non-empty — positions in this tuple are the topology's
+    node indices).
+    """
+    if isinstance(workers, (int, np.integer)):
+        if workers < 1:
+            raise ValueError(f"need at least one worker, got m={workers}")
+        return tuple(range(int(workers)))
+    ids = tuple(int(w) for w in workers)
+    if not ids:
+        raise ValueError("survivor list must be non-empty")
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"survivor ids must be distinct, got {ids}")
+    if any(w < 0 for w in ids):
+        raise ValueError(f"survivor ids must be non-negative, got {ids}")
+    return ids
+
+
+def num_hop_phases(workers: WorkerSpec) -> int:
     """Number of distinct hop distances in the exponential graph."""
+    m = len(worker_order(workers))
     if m <= 1:
         return 1
     return max(1, math.ceil(math.log2(m)))
 
 
-def exponential_hops(m: int) -> list[int]:
+def exponential_hops(workers: WorkerSpec) -> list[int]:
     """Hop distances cycled through by the time-varying exponential graph."""
+    m = len(worker_order(workers))
     if m <= 1:
         return [0]
     return [2**j % m for j in range(num_hop_phases(m))]
 
 
-def hop_at_step(m: int, k) -> jnp.ndarray:
+def hop_at_step(workers: WorkerSpec, k) -> jnp.ndarray:
     """Hop distance used at (global) inner step ``k`` (traced int ok)."""
-    hops = jnp.asarray(exponential_hops(m), dtype=jnp.int32)
+    hops = jnp.asarray(exponential_hops(workers), dtype=jnp.int32)
     return hops[k % hops.shape[0]]
 
 
-def mixing_matrix_exponential(m: int, k: int) -> np.ndarray:
+def mixing_matrix_exponential(workers: WorkerSpec, k: int) -> np.ndarray:
     """Column-stochastic mixing matrix P_k of the directed exponential graph.
 
     Column j of P distributes node j's mass: p[j, j] = 1/2 stays, p[(j+hop) %
-    m, j] = 1/2 is pushed to the out-neighbor.  (numpy; used by tests and the
+    m, j] = 1/2 is pushed to the out-neighbor.  Rows/columns are indexed by
+    POSITION in the ordered survivor list.  (numpy; used by tests and the
     reference implementation.)
     """
+    m = len(worker_order(workers))
     hops = exponential_hops(m)
     hop = hops[k % len(hops)]
     P = np.zeros((m, m))
@@ -57,8 +94,12 @@ def mixing_matrix_exponential(m: int, k: int) -> np.ndarray:
     return P
 
 
-def mixing_matrix_ring(m: int) -> np.ndarray:
-    """Doubly-stochastic symmetric ring used by D-PSGD (self + both peers)."""
+def mixing_matrix_ring(workers: WorkerSpec) -> np.ndarray:
+    """Doubly-stochastic symmetric ring used by D-PSGD (self + both peers).
+
+    Indexed by position in the ordered survivor list.
+    """
+    m = len(worker_order(workers))
     P = np.zeros((m, m))
     for j in range(m):
         P[j, j] += 1.0 / 3.0
@@ -69,14 +110,19 @@ def mixing_matrix_ring(m: int) -> np.ndarray:
     return P
 
 
-def ppermute_perm(m: int, hop) -> list[tuple[int, int]]:
-    """(source, dest) pairs realizing ``jnp.roll(x, +hop)`` across m devices.
+def ppermute_perm(workers: WorkerSpec, hop) -> list[tuple[int, int]]:
+    """(source, dest) pairs realizing ``jnp.roll(x, +hop)`` across workers.
 
-    Slot ``i`` receives from the peer ``hop`` behind, i.e. source ``j`` sends
-    to ``(j + hop) % m`` — the directed push of the exponential graph, as a
-    ``jax.lax.ppermute`` permutation for the mesh-lowered backend.
+    Slot ``i`` receives from the peer ``hop`` positions behind, i.e. source
+    ``j`` sends to the peer ``hop`` positions ahead — the directed push of
+    the exponential graph, as a ``jax.lax.ppermute`` permutation for the
+    mesh-lowered backend.  With a survivor list the pairs are over the
+    actual ids (a bijection on the surviving set): after evicting worker 2
+    from m=4, ``ppermute_perm([0, 1, 3], 1) == [(0, 1), (1, 3), (3, 0)]``.
     """
-    return [(j, (j + int(hop)) % m) for j in range(m)]
+    ids = worker_order(workers)
+    m = len(ids)
+    return [(ids[j], ids[(j + int(hop)) % m]) for j in range(m)]
 
 
 def roll_workers(tree, hop, axis: int = 0):

@@ -395,6 +395,14 @@ def spmd_batch_specs(layout: WorkerLayout, batches: PyTree) -> PyTree:
     )
 
 
+def spmd_mask_spec(layout: WorkerLayout) -> P:
+    """PartitionSpec of the ``(W,)`` per-round participation mask entering
+    ``shard_map`` (masked exact average): sharded over the worker mesh axes
+    like every worker-leading state leaf, so the mapped body sees its local
+    workers' slice."""
+    return P(_wax_entry(layout)[0])
+
+
 def batch_shardings(layout: WorkerLayout, batch_shapes: PyTree) -> PyTree:
     """NamedShardings of training batches on the GSPMD (dry-run) path."""
     mesh = layout.mesh

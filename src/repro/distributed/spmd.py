@@ -232,10 +232,15 @@ def build_spmd_round(
     metric_specs = {"loss": P()}
     if cfg.track_drift:
         metric_specs["drift"] = P()
+    in_specs = (state_specs, batch_specs, P())
+    if cfg.masked_average:
+        # the (W,) participation mask is a fourth traced input, sharded over
+        # the worker axes — masks change per round without recompiling
+        in_specs = in_specs + (sharding.spmd_mask_spec(layout),)
     mapped = shard_map(
         body,
         mesh=layout.mesh,
-        in_specs=(state_specs, batch_specs, P()),
+        in_specs=in_specs,
         out_specs=(state_specs, metric_specs),
         check_rep=False,
     )
@@ -260,23 +265,52 @@ def make_spmd_slowmo_round(
     _validate_tp_loss(layout, loss_fn)
     cache: dict = {}
 
-    def round_fn(state, batches, lr):
+    def round_fn(state, batches, lr, *mask):
         # re-check every call, not just on cache miss: the cache is keyed on
         # pytree STRUCTURE, so a later call with the same structure but a
         # ragged batch shape would otherwise skip the eager check and die
-        # deep inside shard_map instead.
+        # deep inside shard_map instead.  ``*mask`` is the (W,) participation
+        # vector, required (as one extra positional) iff cfg.masked_average.
         _validate_batches(layout, batches)
         key = (jax.tree.structure(state), jax.tree.structure(batches))
         if key not in cache:
             cache[key] = build_spmd_round(
                 cfg, loss_fn, layout, state, batches, pack, local_tree_inner
             )
-        return cache[key](state, batches, lr)
+        return cache[key](state, batches, lr, *mask)
 
     round_fn.build = lambda state, batches: build_spmd_round(
         cfg, loss_fn, layout, state, batches, pack, local_tree_inner
     )
     return round_fn
+
+
+def make_survivor_round(
+    cfg: SlowMoConfig,
+    loss_fn: Callable[[PyTree, PyTree], Any],
+    layout: WorkerLayout,
+    survivors,
+    pack=None,
+    local_tree_inner=None,
+):
+    """Rebuild the compiled round for an ordered survivor set.
+
+    At an elastic boundary the membership changed: this derives the survivor
+    ``WorkerLayout`` (``launch.mesh.make_survivor_layout`` — the surviving
+    devices, worker axes collapsed to one), the survivor ``SlowMoConfig``
+    (``num_workers=len(survivors)``, which re-derives gossip topology, hops
+    and replica groups for the new count), and a fresh shard-mapped round
+    over them.  The PackSpec is worker-count-independent and is reused
+    as-is.  Returns ``(new_cfg, new_layout, round_fn)``; the state must be
+    resized separately (``repro.elastic.reconfigure``).
+    """
+    import dataclasses
+
+    new_layout = mesh_lib.make_survivor_layout(layout, survivors)
+    new_cfg = dataclasses.replace(cfg, num_workers=new_layout.num_workers)
+    return new_cfg, new_layout, make_spmd_slowmo_round(
+        new_cfg, loss_fn, new_layout, pack=pack, local_tree_inner=local_tree_inner
+    )
 
 
 def state_shardings(cfg: SlowMoConfig, layout: WorkerLayout, state: PyTree) -> PyTree:

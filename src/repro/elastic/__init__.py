@@ -1,0 +1,33 @@
+"""Elastic SlowMo: dynamic worker sets, straggler masks, fault injection.
+
+The subsystem that makes the SlowMo round survive worker failure:
+
+* ``coordinator`` — heartbeat/clock bookkeeping, timeout -> evict,
+  rejoin, retry-with-backoff around the boundary step;
+* ``reconfigure`` — state surgery at a round boundary (evict slicing,
+  rejoin from the rebroadcast outer state, cross-worker-count resize);
+* ``faults`` — the deterministic, seedable ``FaultPlan`` the trainer
+  replays (kill / delay / flaky-then-recover / rejoin).
+
+The execution-side halves live where their seams are: the masked weighted
+mean in ``core.comm.worker_mean``, survivor topologies in
+``core.topology``, survivor layouts in ``launch.mesh.make_survivor_layout``
+and the rebuilt compiled round in ``distributed.spmd.make_survivor_round``.
+``train.trainer.Trainer(..., elastic=..., faults=...)`` drives the loop.
+"""
+
+from .coordinator import DeadWorkerSetError, ElasticConfig, ElasticCoordinator
+from .faults import FaultEvent, FaultPlan, TransientWorkerError
+from .reconfigure import admit_state, resize_state, survivor_state
+
+__all__ = [
+    "DeadWorkerSetError",
+    "ElasticConfig",
+    "ElasticCoordinator",
+    "FaultEvent",
+    "FaultPlan",
+    "TransientWorkerError",
+    "admit_state",
+    "resize_state",
+    "survivor_state",
+]

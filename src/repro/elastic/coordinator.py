@@ -1,0 +1,156 @@
+"""The elastic membership coordinator: heartbeats, eviction, rejoin, retry.
+
+SlowMo's outer boundary is the reconfiguration point — between rounds all
+state a worker needs to (re)join is the replicated packed outer iterate
+(``outer_params``, ``slow_u``).  The coordinator owns the MEMBERSHIP
+bookkeeping around that boundary; it never touches arrays:
+
+* **clocks** — the round index is the logical clock.  Workers heartbeat
+  once per round; ``advance(r)`` compares each member's last-seen round
+  against ``timeout_rounds`` and returns the newly timed-out workers.
+* **evict** — a timed-out worker leaves the ordered survivor list.  Until
+  eviction lands (the detection window), the per-round participation mask
+  already zeroes the silent worker out of the exact average — masking
+  covers the gap between failure and reconfiguration.
+* **rejoin** — a returning worker re-enters the survivor list (ascending id
+  order keeps layouts deterministic); the trainer fills its state slot from
+  the rebroadcast outer state (``elastic.reconfigure``).
+* **retry-with-backoff** — ``run_boundary`` wraps the boundary step:
+  transient failures (``faults.TransientWorkerError``) are retried with
+  exponential backoff (injectable ``sleep`` keeps tests instant); anything
+  still failing after ``max_retries`` propagates.
+
+The protocol shape (clock bookkeeping, explicit membership epochs, barriers
+at the boundary) follows parameter-server client designs — see the
+dist-kge parameter client referenced in ROADMAP.md — reduced to SlowMo's
+single synchronization point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable
+
+from .faults import TransientWorkerError
+
+
+class DeadWorkerSetError(RuntimeError):
+    """Raised when evictions would shrink the membership below
+    ``ElasticConfig.min_workers`` — the run cannot continue."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs of the elastic protocol (defaults documented in
+    docs/architecture.md §5)."""
+
+    timeout_rounds: int = 1  # heartbeat silence (in rounds) before eviction
+    min_workers: int = 1  # never evict below this many survivors
+    max_retries: int = 3  # boundary attempts after the first failure
+    backoff_base_s: float = 0.05  # first retry sleeps this long ...
+    backoff_max_s: float = 2.0  # ... doubling per attempt, capped here
+    mask_stragglers: bool = True  # thread the participation mask (requires
+    # exact_average; silent workers are masked out of line 6 until evicted)
+
+    def __post_init__(self):
+        if self.timeout_rounds < 1:
+            raise ValueError("timeout_rounds must be >= 1")
+        if self.min_workers < 1:
+            raise ValueError("min_workers must be >= 1")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+
+class ElasticCoordinator:
+    """Membership state machine over an ordered survivor list.
+
+    ``members`` is always ascending worker ids — the ordered survivor
+    convention ``core.topology`` / ``launch.mesh.make_survivor_layout``
+    derive topologies from, so every layer agrees on slot order.
+    """
+
+    def __init__(
+        self,
+        workers: Iterable[int],
+        cfg: ElasticConfig | None = None,
+        *,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.cfg = cfg or ElasticConfig()
+        self._members: list[int] = sorted(int(w) for w in workers)
+        if not self._members:
+            raise ValueError("need at least one worker")
+        self._last_seen: dict[int, int] = {w: -1 for w in self._members}
+        self._left: dict[int, int] = {}  # worker -> round it was evicted at
+        self._sleep = sleep
+        self.clock = 0
+
+    # -- membership ----------------------------------------------------------
+    @property
+    def members(self) -> tuple[int, ...]:
+        """The current ordered survivor list."""
+        return tuple(self._members)
+
+    def heartbeat(self, worker: int, round_idx: int) -> None:
+        """Worker ``worker`` reports alive at round ``round_idx``."""
+        if worker in self._last_seen:
+            self._last_seen[worker] = max(self._last_seen[worker], round_idx)
+
+    def silent(self, round_idx: int) -> tuple[int, ...]:
+        """Members whose heartbeat is missing AT round ``round_idx`` (their
+        participation-mask zeros during the detection window)."""
+        return tuple(
+            w for w in self._members if self._last_seen[w] < round_idx
+        )
+
+    def advance(self, round_idx: int) -> tuple[int, ...]:
+        """Move the clock to ``round_idx``; evict members silent for
+        ``timeout_rounds`` or more.  Returns the newly evicted workers."""
+        self.clock = round_idx
+        timed_out = [
+            w
+            for w in self._members
+            if round_idx - self._last_seen[w] > self.cfg.timeout_rounds
+        ]
+        if timed_out:
+            if len(self._members) - len(timed_out) < self.cfg.min_workers:
+                raise DeadWorkerSetError(
+                    f"evicting {timed_out} at round {round_idx} leaves fewer "
+                    f"than min_workers={self.cfg.min_workers} survivors"
+                )
+            for w in timed_out:
+                self._members.remove(w)
+                del self._last_seen[w]
+                self._left[w] = round_idx
+        return tuple(timed_out)
+
+    def rejoin(self, worker: int, round_idx: int) -> None:
+        """Re-admit a worker (or admit a new id) at a round boundary."""
+        worker = int(worker)
+        if worker in self._last_seen:
+            return
+        self._left.pop(worker, None)
+        self._members.append(worker)
+        self._members.sort()
+        self._last_seen[worker] = round_idx
+
+    # -- the boundary step ---------------------------------------------------
+    def run_boundary(self, fn: Callable[[int], object]):
+        """Run ``fn(attempt_idx)`` with retry-with-backoff: transient
+        failures (``TransientWorkerError``) sleep
+        ``min(backoff_base_s * 2**attempt, backoff_max_s)`` and retry, up to
+        ``max_retries`` retries; the last failure re-raises."""
+        attempt = 0
+        while True:
+            try:
+                return fn(attempt)
+            except TransientWorkerError:
+                if attempt >= self.cfg.max_retries:
+                    raise
+                self._sleep(
+                    min(
+                        self.cfg.backoff_base_s * (2.0**attempt),
+                        self.cfg.backoff_max_s,
+                    )
+                )
+                attempt += 1

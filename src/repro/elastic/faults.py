@@ -1,0 +1,179 @@
+"""Deterministic fault injection for elastic SlowMo runs.
+
+A ``FaultPlan`` is a static, seedable schedule of worker failures the
+trainer replays against the elastic loop — the simulation substrate the
+kill-a-worker integration tests (and chaos-style soak runs) drive:
+
+* ``kill worker w at round r`` — w stops heartbeating from round ``r`` on;
+  the coordinator times it out and evicts it at a round boundary.
+* ``delay worker w at round r by d steps`` — w straggles: it misses the
+  boundary of the rounds covering those ``d`` inner steps and is masked out
+  of the exact average (``SlowMoConfig.masked_average``) for
+  ``ceil(d / tau)`` rounds, then recovers (the boundary broadcast hands it
+  the fresh averaged iterate — no state surgery needed).
+* ``flaky at round r (n attempts)`` — the boundary step raises a transient
+  ``TransientWorkerError`` ``n`` times before succeeding, exercising the
+  coordinator's retry-with-backoff.
+* ``rejoin worker w at round r`` — a previously killed worker comes back;
+  the coordinator re-admits it and the reconfigured state fills its slot
+  from the rebroadcast packed outer state.
+
+Everything is derived from explicit events or a seed — no wall clocks, no
+real randomness at run time — so a failing elastic run replays exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+import numpy as np
+
+KINDS = ("kill", "delay", "flaky", "rejoin")
+
+
+class TransientWorkerError(RuntimeError):
+    """A simulated recoverable communication failure at a round boundary
+    (the flaky fault): the coordinator's retry-with-backoff absorbs it."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str  # one of KINDS
+    worker: int  # target worker id (ignored for 'flaky': the boundary fails)
+    round: int  # round index the fault fires at
+    steps: int = 0  # 'delay': inner steps the worker falls behind
+    attempts: int = 0  # 'flaky': failed boundary attempts before success
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; have {KINDS}")
+        if self.round < 0 or self.worker < 0:
+            raise ValueError(f"round/worker must be >= 0: {self}")
+        if self.kind == "delay" and self.steps < 1:
+            raise ValueError(f"delay faults need steps >= 1: {self}")
+        if self.kind == "flaky" and self.attempts < 1:
+            raise ValueError(f"flaky faults need attempts >= 1: {self}")
+
+
+# CLI grammar, one event per token: kill:2@3  delay:1@2+5  flaky:@4*2  rejoin:2@6
+_SPEC = re.compile(
+    r"^(?P<kind>kill|delay|flaky|rejoin):(?P<worker>\d*)@(?P<round>\d+)"
+    r"(?:\+(?P<steps>\d+))?(?:\*(?P<attempts>\d+))?$"
+)
+
+
+class FaultPlan:
+    """An immutable schedule of ``FaultEvent``s, queried per round."""
+
+    def __init__(self, events=()):
+        evs = tuple(
+            e if isinstance(e, FaultEvent) else FaultEvent(**e) for e in events
+        )
+        self.events = tuple(sorted(evs, key=lambda e: (e.round, e.worker, e.kind)))
+
+    @classmethod
+    def parse(cls, specs) -> "FaultPlan":
+        """Parse CLI tokens: ``kill:W@R``, ``delay:W@R+STEPS``,
+        ``flaky:@R*N`` (worker id optional), ``rejoin:W@R``."""
+        events = []
+        for spec in specs:
+            m = _SPEC.match(spec.strip())
+            if not m:
+                raise ValueError(
+                    f"bad fault spec {spec!r} (want kill:W@R, delay:W@R+S, "
+                    "flaky:@R*N, rejoin:W@R)"
+                )
+            events.append(
+                FaultEvent(
+                    kind=m["kind"],
+                    worker=int(m["worker"] or 0),
+                    round=int(m["round"]),
+                    steps=int(m["steps"] or (1 if m["kind"] == "delay" else 0)),
+                    attempts=int(
+                        m["attempts"] or (1 if m["kind"] == "flaky" else 0)
+                    ),
+                )
+            )
+        return cls(events)
+
+    @classmethod
+    def from_seed(
+        cls,
+        seed: int,
+        num_workers: int,
+        rounds: int,
+        *,
+        p_kill: float = 0.02,
+        p_delay: float = 0.05,
+        p_flaky: float = 0.05,
+        max_delay_steps: int = 8,
+        min_workers: int = 1,
+    ) -> "FaultPlan":
+        """A reproducible random plan: every (round, worker) cell draws
+        independently, never killing below ``min_workers`` survivors."""
+        rng = np.random.default_rng(seed)
+        alive = set(range(num_workers))
+        events = []
+        for r in range(rounds):
+            for w in sorted(alive):
+                u = rng.random()
+                if u < p_kill and len(alive) > min_workers:
+                    alive.discard(w)
+                    events.append(FaultEvent("kill", w, r))
+                elif u < p_kill + p_delay:
+                    events.append(
+                        FaultEvent(
+                            "delay", w, r, steps=int(rng.integers(1, max_delay_steps + 1))
+                        )
+                    )
+            if rng.random() < p_flaky:
+                events.append(FaultEvent("flaky", 0, r, attempts=1))
+        return cls(events)
+
+    # -- per-round queries ---------------------------------------------------
+    def kills(self, r: int) -> tuple[int, ...]:
+        return tuple(e.worker for e in self.events if e.kind == "kill" and e.round == r)
+
+    def rejoins(self, r: int) -> tuple[int, ...]:
+        return tuple(
+            e.worker for e in self.events if e.kind == "rejoin" and e.round == r
+        )
+
+    def delayed(self, r: int, tau: int) -> frozenset[int]:
+        """Workers straggling in round ``r``: a delay of ``d`` steps starting
+        at round ``r0`` masks the worker out of ``ceil(d / tau)`` boundaries
+        (it needs that many rounds' worth of compute to catch up)."""
+        out = set()
+        for e in self.events:
+            if e.kind != "delay":
+                continue
+            if e.round <= r < e.round + math.ceil(e.steps / max(tau, 1)):
+                out.add(e.worker)
+        return frozenset(out)
+
+    def flaky_attempts(self, r: int) -> int:
+        """Failed boundary attempts to inject at round ``r`` before letting
+        the boundary step succeed."""
+        return sum(
+            e.attempts for e in self.events if e.kind == "flaky" and e.round == r
+        )
+
+    def dead(self, r: int) -> frozenset[int]:
+        """Workers dead AT round ``r``: killed at some round <= r and not
+        rejoined at a round in between."""
+        out = set()
+        for e in self.events:
+            if e.round > r:
+                break
+            if e.kind == "kill":
+                out.add(e.worker)
+            elif e.kind == "rejoin":
+                out.discard(e.worker)
+        return frozenset(out)
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def __repr__(self) -> str:
+        return f"FaultPlan({list(self.events)!r})"

@@ -1,0 +1,180 @@
+"""State surgery at an elastic boundary: evict, rejoin, cross-W resize.
+
+A ``SlowMoState`` carries the worker count in exactly three places — the
+leading worker axis of per-worker components (``params``, the inner
+optimizer buffers, the gossip weights), the replicated outer state
+(``outer_params``, ``slow_u``; worker-axis-free under ``exact_average``),
+and the scalar counters.  Reconfiguration is therefore pure slicing and
+broadcasting, all of it derivable at a round boundary:
+
+* ``survivor_state`` — EVICTION: select the survivor slots along the
+  leading worker axis of every per-worker component; outer state and
+  counters carry over.  Works for every preset (including noaverage, where
+  the outer state itself is worker-leading and is sliced too).
+* ``resize_state`` — COLD RESIZE (checkpoint restored into a different
+  ``W``, or a full restart from the outer state): every worker slot is
+  rebuilt from the replicated packed outer iterate exactly the way
+  ``init_slowmo`` builds it — the "rebroadcast the packed outer state"
+  protocol — with ``outer_params`` / ``slow_u`` / counters carried.
+  Requires ``exact_average`` (that is what makes the outer state
+  worker-count-independent).
+* ``admit_state`` — REJOIN/GROW: surviving slots keep their state, new
+  slots fill from the rebroadcast outer state (what a fresh joiner is
+  handed on the wire).
+
+The ``PackSpec`` is worker-count-independent (it indexes the per-worker
+row layout, not the worker axis), so packed states resize with the same
+spec they were built with.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import slowmo, topology
+from ..core.base_opt import InnerOptState
+from ..core.gossip import GossipState
+from ..core.slowmo import SlowMoConfig, SlowMoState
+
+
+def _map_worker_leading(cfg: SlowMoConfig, state: SlowMoState, f) -> SlowMoState:
+    """Apply ``f`` (a tree transform) to every component of ``state`` that
+    carries a leading worker axis under ``cfg``; pass the rest through.
+    The component layout mirrors ``slowmo.init_slowmo`` exactly: ``inner.v``
+    is worker-leading only for adam, gossip ``stale``/``stale_w`` only for
+    osgp, and the outer state only under ``exact_average=False``."""
+    adam = cfg.inner.kind == "adam"
+    osgp = cfg.gossip_config.kind == "osgp"
+    replicated_outer = cfg.exact_average
+    g = state.gossip
+    return SlowMoState(
+        params=f(state.params),
+        inner=InnerOptState(
+            h=f(state.inner.h),
+            v=f(state.inner.v) if adam else state.inner.v,
+            count=state.inner.count,
+        ),
+        gossip=GossipState(
+            w=f(g.w),
+            stale=f(g.stale) if osgp else g.stale,
+            stale_w=f(g.stale_w) if osgp else g.stale_w,
+        ),
+        outer_params=state.outer_params if replicated_outer else f(state.outer_params),
+        slow_u=state.slow_u if replicated_outer else f(state.slow_u),
+        step=state.step,
+        outer_step=state.outer_step,
+    )
+
+
+def survivor_state(
+    cfg: SlowMoConfig, state: SlowMoState, survivors
+) -> SlowMoState:
+    """Evict: keep the slots of the ordered survivor list ``survivors``.
+
+    ``cfg`` is the config the state was built with (the OLD worker count);
+    slot ids index its worker axis.  Layout-agnostic: packed ``(W, rows,
+    1024)`` buffers and per-leaf ``(W, ...)`` trees slice identically."""
+    ids = np.asarray(topology.worker_order(survivors))
+    if ids.size and int(ids.max()) >= cfg.num_workers:
+        raise ValueError(
+            f"survivor ids {ids.tolist()} out of range for "
+            f"num_workers={cfg.num_workers}"
+        )
+
+    def take(tree):
+        return jax.tree.map(
+            lambda x: jnp.take(x, ids, axis=0) if getattr(x, "ndim", 0) else x,
+            tree,
+        )
+
+    return _map_worker_leading(cfg, state, take)
+
+
+def resize_state(
+    cfg: SlowMoConfig, state: SlowMoState, *, pack=None
+) -> SlowMoState:
+    """Rebuild every worker slot of ``state`` for ``cfg.num_workers`` workers
+    from the replicated outer state — grown or shrunk ``W`` both work, which
+    is what lets a packed checkpoint resume on a different worker count.
+
+    Every slot gets exactly what ``init_slowmo`` hands a fresh worker (the
+    outer iterate broadcast at ``param_dtype``, zeroed inner buffers, fresh
+    gossip weights); ``outer_params`` / ``slow_u`` / ``step`` /
+    ``outer_step`` carry over, so slow momentum continues across the resize.
+    """
+    if not cfg.exact_average:
+        raise ValueError(
+            "resize_state rebuilds workers from the REPLICATED outer state; "
+            "exact_average=False keeps per-worker outer state and cannot "
+            "resize this way (evict with survivor_state instead)"
+        )
+    if cfg.packed and pack is None:
+        raise ValueError("packed resize needs the state's PackSpec")
+    outer_tree = pack.unpack(state.outer_params) if cfg.packed else state.outer_params
+    fresh = slowmo.init_slowmo(cfg, outer_tree, pack=pack)
+    return fresh._replace(
+        outer_params=state.outer_params,
+        slow_u=state.slow_u,
+        step=state.step,
+        outer_step=state.outer_step,
+    )
+
+
+def admit_state(
+    cfg: SlowMoConfig,
+    state: SlowMoState,
+    old_workers,
+    new_workers,
+    *,
+    pack=None,
+) -> SlowMoState:
+    """Rejoin/grow: remap ``state`` (built for the ordered set
+    ``old_workers`` under ``cfg``-with-their-count) onto ``new_workers``.
+
+    Slots whose id survives keep their per-worker state; new ids fill from
+    the rebroadcast outer state.  ``cfg`` must already carry
+    ``num_workers == len(new_workers)``."""
+    old = list(topology.worker_order(old_workers))
+    new = topology.worker_order(new_workers)
+    if cfg.num_workers != len(new):
+        raise ValueError(
+            f"cfg.num_workers={cfg.num_workers} != len(new_workers)={len(new)}"
+        )
+    fresh = resize_state(cfg, state, pack=pack)
+    src = np.asarray([old.index(w) if w in old else 0 for w in new])
+    keep = np.asarray([w in old for w in new])
+
+    def merge(old_tree, fresh_tree):
+        def one(o, fnew):
+            if not getattr(o, "ndim", 0):
+                return fnew
+            taken = jnp.take(o, src, axis=0)
+            k = jnp.asarray(keep).reshape((-1,) + (1,) * (o.ndim - 1))
+            return jnp.where(k, taken, fnew).astype(fnew.dtype)
+
+        return jax.tree.map(one, old_tree, fresh_tree)
+
+    adam = cfg.inner.kind == "adam"
+    osgp = cfg.gossip_config.kind == "osgp"
+    return SlowMoState(
+        params=merge(state.params, fresh.params),
+        inner=InnerOptState(
+            h=merge(state.inner.h, fresh.inner.h),
+            v=merge(state.inner.v, fresh.inner.v) if adam else fresh.inner.v,
+            count=state.inner.count,
+        ),
+        gossip=GossipState(
+            w=merge(state.gossip.w, fresh.gossip.w),
+            stale=merge(state.gossip.stale, fresh.gossip.stale)
+            if osgp
+            else fresh.gossip.stale,
+            stale_w=merge(state.gossip.stale_w, fresh.gossip.stale_w)
+            if osgp
+            else fresh.gossip.stale_w,
+        ),
+        outer_params=fresh.outer_params,
+        slow_u=fresh.slow_u,
+        step=state.step,
+        outer_step=state.outer_step,
+    )

@@ -154,6 +154,48 @@ class WorkerLayout:
         )
 
 
+def make_survivor_layout(layout: WorkerLayout, survivors) -> WorkerLayout:
+    """The layout of the SURVIVING worker set after an elastic eviction.
+
+    ``survivors`` is the ordered list of worker ids (slots along the
+    flattened worker axes of ``layout``) that remain.  The surviving
+    devices are selected — each worker keeps its physical devices, including
+    its whole batch/model group on hierarchical/TP layouts — and the worker
+    axes collapse to ONE axis (named after the first worker axis) of size
+    ``len(survivors)``, because the survivor set need not factor over
+    multiple axes.  Position ``j`` of the new worker axis is survivor
+    ``survivors[j]``: the same ordered-survivor convention
+    ``core.topology`` derives hops, mixing matrices and ppermute pairs
+    from, so the rebuilt round's replica groups and gossip graph are the
+    exponential graph of the surviving set.
+    """
+    from ..core import topology
+
+    ids = topology.worker_order(survivors)
+    if not layout.worker_axes:
+        raise ValueError("survivor layouts need a layout with worker axes")
+    W = layout.num_workers
+    bad = [w for w in ids if w >= W]
+    if bad:
+        raise ValueError(f"survivor ids {bad} out of range for {W} workers")
+    names = tuple(layout.mesh.axis_names)
+    wdims = [names.index(a) for a in layout.worker_axes]
+    other = [i for i in range(len(names)) if i not in wdims]
+    # worker axes to the front, flattened row-major (the worker-id order),
+    # then select the survivor rows
+    devs = np.moveaxis(layout.mesh.devices, wdims, range(len(wdims)))
+    devs = devs.reshape((W,) + tuple(devs.shape[len(wdims):]))
+    sel = devs[np.asarray(ids)]
+    new_names = (layout.worker_axes[0],) + tuple(names[i] for i in other)
+    mesh = Mesh(sel, new_names)
+    return WorkerLayout(
+        mesh,
+        worker_axes=(layout.worker_axes[0],),
+        batch_axes=layout.batch_axes,
+        model_axes=layout.model_axes,
+    )
+
+
 def validate_spmd_model_axes(layout: WorkerLayout) -> None:
     """THE model-axis rule of the shard_map path, shared by
     ``make_layout(spmd=True)`` and ``repro.distributed.spmd._validate``:

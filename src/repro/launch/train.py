@@ -28,7 +28,12 @@ def main():
     ap.add_argument("--algo", default="local_sgd+slowmo")
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--tau", type=int, default=12)
-    ap.add_argument("--beta", type=float, default=0.6)
+    ap.add_argument(
+        "--beta",
+        type=float,
+        default=0.7,
+        help="slow momentum (paper sweeps 0.4-0.8; Table 2 uses 0.7)",
+    )
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--lr", type=float, default=0.2)
@@ -74,6 +79,40 @@ def main():
         "the whole text family qualifies, swiglu included (de-fused "
         "w_gate/w_up), plus hubert-xlarge; MoE expert parallelism is a "
         "ROADMAP item",
+    )
+    ap.add_argument(
+        "--elastic",
+        action="store_true",
+        help="run the elastic loop: heartbeat/evict dead workers at round "
+        "boundaries, mask stragglers out of the exact average, retry flaky "
+        "boundaries with backoff (docs/architecture.md section 5)",
+    )
+    ap.add_argument(
+        "--fault",
+        action="append",
+        default=[],
+        metavar="SPEC",
+        help="inject a deterministic fault (repeatable; implies --elastic): "
+        "kill:W@R, delay:W@R+STEPS, flaky:@R*N, rejoin:W@R",
+    )
+    ap.add_argument(
+        "--fault-seed",
+        type=int,
+        default=None,
+        help="draw a random-but-reproducible FaultPlan from this seed "
+        "instead of explicit --fault specs (implies --elastic)",
+    )
+    ap.add_argument(
+        "--timeout-rounds",
+        type=int,
+        default=1,
+        help="elastic: rounds of heartbeat silence before eviction",
+    )
+    ap.add_argument(
+        "--min-workers",
+        type=int,
+        default=1,
+        help="elastic: abort rather than evict below this many survivors",
     )
     args = ap.parse_args()
 
@@ -124,7 +163,28 @@ def main():
         lr=args.lr, log_every=max(args.rounds // 10, 1),
         ckpt_every=10 if args.ckpt else 0, ckpt_path=args.ckpt,
     )
-    trainer = Trainer(model, smcfg, tc, sampler, layout=layout)
+
+    elastic = faults = None
+    if args.elastic or args.fault or args.fault_seed is not None:
+        from ..elastic import ElasticConfig
+        from ..elastic.faults import FaultPlan
+
+        elastic = ElasticConfig(
+            timeout_rounds=args.timeout_rounds, min_workers=args.min_workers
+        )
+        if args.fault_seed is not None:
+            faults = FaultPlan.from_seed(
+                args.fault_seed, args.workers, args.rounds,
+                min_workers=args.min_workers,
+            )
+        elif args.fault:
+            faults = FaultPlan.parse(args.fault)
+        if faults:
+            print(f"elastic: injecting {len(faults.events)} fault(s)")
+
+    trainer = Trainer(
+        model, smcfg, tc, sampler, layout=layout, elastic=elastic, faults=faults
+    )
 
     state = None
     if args.ckpt and ckpt_lib.exists(args.ckpt):

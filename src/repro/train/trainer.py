@@ -65,18 +65,31 @@ class Trainer:
         *,
         eval_fn: Optional[Callable[[PyTree], float]] = None,
         layout=None,
+        elastic=None,
+        faults=None,
     ):
         if tc.grad_clip and not smcfg.inner.clip_norm:
             smcfg = dataclasses.replace(
                 smcfg,
                 inner=dataclasses.replace(smcfg.inner, clip_norm=tc.grad_clip),
             )
+        if (
+            elastic is not None
+            and elastic.mask_stragglers
+            and smcfg.exact_average
+            and not smcfg.masked_average
+        ):
+            # straggler tolerance: thread the per-round participation mask
+            # through the compiled round (a traced input — no recompiles)
+            smcfg = dataclasses.replace(smcfg, masked_average=True)
         self.model = model
         self.smcfg = smcfg
         self.tc = tc
         self.sampler = sampler
         self.eval_fn = eval_fn
         self.layout = layout
+        self.elastic = elastic
+        self.faults = faults
         self.lr_fn = make_lr_fn(tc, smcfg.tau)
         self.pack = None
         if smcfg.packed:
@@ -101,8 +114,6 @@ class Trainer:
                     "hierarchical layout (each worker's batch is split across "
                     "its pod's devices)"
                 )
-            from ..distributed import spmd
-
             loss_fn = model.loss_fn
             if getattr(layout, "model_shard", 1) > 1:
                 # tensor-parallel workers: the loss must run its matmuls on
@@ -111,19 +122,29 @@ class Trainer:
                 from ..models import tp as tp_lib
 
                 loss_fn = tp_lib.make_tp_loss(model.config)
-            self.round_fn = spmd.make_spmd_slowmo_round(
-                smcfg, loss_fn, layout, pack=self.pack
-            )
+            self._loss_fn = loss_fn
         else:
-            # the state argument is donated: XLA writes the next round's
-            # state into the same buffers (in/out shapes match 1:1), so no
-            # per-round full-state copy.  Donation deletes the input state
-            # on every backend (CPU included) — run() always rebinds.
-            self.round_fn = jax.jit(
-                slowmo.make_slowmo_round(self.smcfg, model.loss_fn, pack=self.pack),
-                donate_argnums=0,
-            )
+            self._loss_fn = model.loss_fn
+        self.round_fn = self._build_round(self.smcfg, layout)
         self.history: list[dict] = []
+
+    def _build_round(self, cfg: SlowMoConfig, layout):
+        """The compiled round for ``(cfg, layout)`` — also called at elastic
+        boundaries to rebuild for a survivor set."""
+        if layout is not None:
+            from ..distributed import spmd
+
+            return spmd.make_spmd_slowmo_round(
+                cfg, self._loss_fn, layout, pack=self.pack
+            )
+        # the state argument is donated: XLA writes the next round's
+        # state into the same buffers (in/out shapes match 1:1), so no
+        # per-round full-state copy.  Donation deletes the input state
+        # on every backend (CPU included) — run() always rebinds.
+        return jax.jit(
+            slowmo.make_slowmo_round(cfg, self._loss_fn, pack=self.pack),
+            donate_argnums=0,
+        )
 
     def init_state(self, key=None) -> SlowMoState:
         params = self.model.init(key or jax.random.PRNGKey(0))
@@ -152,12 +173,21 @@ class Trainer:
         if self.pack is not None and not packing.is_packed(state.params):
             state = packing.pack_state(self.pack, jax.tree.map(jnp.asarray, state))
         rounds = rounds if rounds is not None else self.tc.total_rounds
+        if self.elastic is not None:
+            return self._run_elastic(state, rounds)
         start = int(jax.device_get(state.outer_step))
         t0 = time.perf_counter()
+        # a masked round (cfg.masked_average without the elastic loop) takes
+        # the all-ones participation vector — bit-identical to unmasked
+        full_mask = (
+            (jnp.ones((self.smcfg.num_workers,), jnp.float32),)
+            if self.smcfg.masked_average
+            else ()
+        )
         for r in range(start, start + rounds):
             lr = self.lr_fn(r * self.smcfg.tau)
             batches = self._batches(r)
-            state, metrics = self.round_fn(state, batches, lr)
+            state, metrics = self.round_fn(state, batches, lr, *full_mask)
             rec = {
                 "round": r,
                 "inner_steps": (r + 1) * self.smcfg.tau,
@@ -181,6 +211,145 @@ class Trainer:
                 )
             if self.tc.ckpt_every and self.tc.ckpt_path and (r + 1) % self.tc.ckpt_every == 0:
                 ckpt_lib.save_state(self.tc.ckpt_path, state, step=r + 1, pack=self.pack)
+        return state
+
+    def _run_elastic(self, state: SlowMoState, rounds: int):
+        """The elastic round loop: heartbeats -> evict/rejoin at the
+        boundary -> straggler mask -> retried boundary step.
+
+        Membership changes reconfigure BEFORE the round runs: the state is
+        sliced (evict) or grown from the rebroadcast outer state (rejoin),
+        the layout/round are rebuilt for the ordered survivor set, and the
+        survivors' batches are the survivor columns of the full sample —
+        so a run that loses worker w reproduces, round for round, a fresh
+        survivor-only run seeded from the boundary state (the kill-a-worker
+        oracle in tests/test_elastic.py)."""
+        from ..elastic import ElasticCoordinator, reconfigure
+        from ..elastic.faults import FaultPlan, TransientWorkerError
+
+        plan = self.faults or FaultPlan()
+        W0 = self.smcfg.num_workers
+        coord = ElasticCoordinator(range(W0), self.elastic)
+        cur_cfg, cur_layout, cur_round = self.smcfg, self.layout, self.round_fn
+        start = int(jax.device_get(state.outer_step))
+        t0 = time.perf_counter()
+        for r in range(start, start + rounds):
+            # 1. heartbeats, replayed from the fault plan: every member the
+            # plan has not killed reports in for round r
+            dead = plan.dead(r)
+            for w in coord.members:
+                if w not in dead:
+                    coord.heartbeat(w, r)
+            # 2. membership: timeout-based evictions + scheduled rejoins
+            prev = coord.members
+            coord.advance(r)
+            for w in plan.rejoins(r):
+                coord.rejoin(w, r)
+            members = coord.members
+            if members != prev:
+                grown = [w for w in members if w not in prev]
+                if grown:
+                    # rejoin: survivors keep their slots, new slots fill
+                    # from the rebroadcast outer state
+                    state = reconfigure.admit_state(
+                        dataclasses.replace(cur_cfg, num_workers=len(members)),
+                        state,
+                        prev,
+                        members,
+                        pack=self.pack,
+                    )
+                else:
+                    # evict: slice the survivor POSITIONS within the
+                    # previous ordered member list
+                    keep = [prev.index(w) for w in members]
+                    state = reconfigure.survivor_state(cur_cfg, state, keep)
+                cur_cfg = dataclasses.replace(cur_cfg, num_workers=len(members))
+                if cur_layout is not None:
+                    from ..distributed import spmd as spmd_lib
+                    from ..launch import mesh as mesh_lib
+
+                    cur_layout = mesh_lib.make_survivor_layout(
+                        self.layout, members
+                    )
+                    # the reconfigured state still lives on the OLD mesh's
+                    # devices; commit it to the survivor mesh explicitly
+                    state = jax.device_put(
+                        state,
+                        spmd_lib.state_shardings(cur_cfg, cur_layout, state),
+                    )
+                cur_round = self._build_round(cur_cfg, cur_layout)
+            # 3. this round's participation mask: plan-delayed stragglers
+            # plus silent-but-not-yet-evicted workers (detection window)
+            extra = ()
+            if cur_cfg.masked_average:
+                out = plan.delayed(r, cur_cfg.tau) | set(coord.silent(r))
+                mvec = np.asarray(
+                    [0.0 if w in out else 1.0 for w in members], np.float32
+                )
+                if not mvec.any():  # never mask every worker out of line 6
+                    mvec[:] = 1.0
+                extra = (jnp.asarray(mvec),)
+            # 4. batches: survivor columns of the full-W sample, so every
+            # surviving worker consumes exactly its uninterrupted data stream
+            lr = self.lr_fn(r * cur_cfg.tau)
+            full = self._batches(r)
+            if members == tuple(range(W0)):
+                batches = full
+            else:
+                idx = np.asarray(members)
+                batches = jax.tree.map(
+                    lambda x: jnp.take(x, idx, axis=1)
+                    if getattr(x, "ndim", 0) >= 2
+                    else x,
+                    full,
+                )
+
+            # 5. the boundary step, retried with backoff; injected flaky
+            # failures raise BEFORE the donated call, so state is intact
+            fail_n = plan.flaky_attempts(r)
+
+            def attempt(k, state=state, batches=batches, lr=lr, extra=extra,
+                        fail_n=fail_n, r=r, cur_round=cur_round):
+                if k < fail_n:
+                    raise TransientWorkerError(
+                        f"injected boundary failure {k + 1}/{fail_n} at round {r}"
+                    )
+                return cur_round(state, batches, lr, *extra)
+
+            state, metrics = coord.run_boundary(attempt)
+            rec = {
+                "round": r,
+                "inner_steps": (r + 1) * cur_cfg.tau,
+                "loss": float(metrics["loss"]),
+                "lr": float(lr),
+                "workers": len(members),
+                "masked_out": int(len(members) - int(extra[0].sum()))
+                if extra
+                else 0,
+                "wall_s": time.perf_counter() - t0,
+            }
+            if "drift" in metrics:
+                rec["drift"] = float(metrics["drift"])
+            if self.eval_fn and (
+                r % max(self.tc.log_every, 1) == 0 or r == start + rounds - 1
+            ):
+                rec["eval"] = float(
+                    self.eval_fn(_eval_params(cur_cfg, state, self.pack))
+                )
+            self.history.append(rec)
+            if self.tc.log_every and r % self.tc.log_every == 0:
+                print(
+                    f"round {r:4d} W={rec['workers']} loss {rec['loss']:.4f} "
+                    f"lr {rec['lr']:.2e} masked={rec['masked_out']}"
+                )
+            if (
+                self.tc.ckpt_every
+                and self.tc.ckpt_path
+                and (r + 1) % self.tc.ckpt_every == 0
+            ):
+                ckpt_lib.save_state(
+                    self.tc.ckpt_path, state, step=r + 1, pack=self.pack
+                )
         return state
 
 

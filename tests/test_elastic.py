@@ -1,0 +1,471 @@
+"""Elastic SlowMo: fault plans, membership, state surgery, kill-a-worker.
+
+Three tiers:
+
+* in-process unit tests of the pure pieces — ``FaultPlan`` parsing/queries,
+  the ``ElasticCoordinator`` state machine (eviction timing, min-workers
+  floor, retry-with-backoff), ``reconfigure`` state surgery, and the masked
+  ``worker_mean`` on the array-axis oracle;
+* the cross-worker-count restore: a packed checkpoint written at one worker
+  count resumes — via the replicated outer state — on a GROWN and a SHRUNK
+  worker set, with slow momentum and counters carried;
+* the kill-a-worker integration test (SUBPROCESS, 8 host devices — conftest
+  must not pollute the main process's device count): an elastic Trainer run
+  that loses a worker mid-run matches a fresh survivor-only oracle to 1e-6
+  on every state leaf, tree AND packed, plus the two no-recompile pins —
+  an all-ones mask is bit-identical to the unmasked round, and sweeping
+  masks leaves the jit cache at ONE entry — and a clean masked contract
+  audit (the ``mask-psum`` budget is real).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm, slowmo
+from repro.elastic import (
+    DeadWorkerSetError,
+    ElasticConfig,
+    ElasticCoordinator,
+    FaultEvent,
+    FaultPlan,
+    TransientWorkerError,
+    admit_state,
+    resize_state,
+    survivor_state,
+)
+from repro.train import checkpoint as ckpt_lib
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# faults
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_parse_grammar(self):
+        plan = FaultPlan.parse(["kill:2@3", "delay:1@4+5", "flaky:@1*2", "rejoin:2@6"])
+        kinds = [e.kind for e in plan.events]
+        assert sorted(kinds) == ["delay", "flaky", "kill", "rejoin"]
+        assert plan.kills(3) == (2,)
+        assert plan.rejoins(6) == (2,)
+        assert plan.flaky_attempts(1) == 2
+
+    @pytest.mark.parametrize("bad", ["kill:2", "evict:1@2", "kill:2@3+1x"])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError, match="bad fault spec"):
+            FaultPlan.parse([bad])
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent("explode", 0, 0)
+        with pytest.raises(ValueError, match="steps >= 1"):
+            FaultEvent("delay", 0, 0, steps=0)
+        with pytest.raises(ValueError, match="attempts >= 1"):
+            FaultEvent("flaky", 0, 0)
+
+    def test_delay_masks_ceil_of_steps_over_tau(self):
+        plan = FaultPlan.parse(["delay:1@4+5"])  # 5 steps, tau=2 -> 3 rounds
+        assert all(1 in plan.delayed(r, tau=2) for r in (4, 5, 6))
+        assert 1 not in plan.delayed(7, tau=2)
+        assert 1 not in plan.delayed(3, tau=2)
+
+    def test_dead_tracks_kill_and_rejoin(self):
+        plan = FaultPlan.parse(["kill:2@3", "rejoin:2@6"])
+        assert plan.dead(2) == frozenset()
+        assert plan.dead(3) == plan.dead(5) == frozenset({2})
+        assert plan.dead(6) == frozenset()
+
+    def test_from_seed_deterministic(self):
+        a = FaultPlan.from_seed(7, num_workers=8, rounds=50)
+        b = FaultPlan.from_seed(7, num_workers=8, rounds=50)
+        assert a.events == b.events
+        assert a.events != FaultPlan.from_seed(8, num_workers=8, rounds=50).events
+
+    def test_from_seed_respects_min_workers(self):
+        plan = FaultPlan.from_seed(
+            3, num_workers=4, rounds=200, p_kill=0.5, min_workers=2
+        )
+        killed = {e.worker for e in plan.events if e.kind == "kill"}
+        assert len(killed) <= 2
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+class TestCoordinator:
+    def test_eviction_timing(self):
+        """A worker silent from round r is masked at r and evicted at the
+        first boundary whose lag exceeds timeout_rounds — the detection
+        window the participation mask covers."""
+        coord = ElasticCoordinator(range(4), ElasticConfig(timeout_rounds=1))
+        for r in range(3):
+            for w in range(4):
+                coord.heartbeat(w, r)
+            assert coord.advance(r) == ()
+        # worker 2 dies: heartbeats stop at round 3
+        for r in (3, 4):
+            for w in (0, 1, 3):
+                coord.heartbeat(w, r)
+        assert coord.silent(3) == (2,)
+        assert coord.advance(3) == ()  # lag 1, not yet > timeout_rounds
+        assert coord.advance(4) == (2,)  # lag 2 -> evicted
+        assert coord.members == (0, 1, 3)
+
+    def test_min_workers_floor(self):
+        coord = ElasticCoordinator(
+            range(2), ElasticConfig(timeout_rounds=1, min_workers=2)
+        )
+        coord.heartbeat(0, 5)
+        with pytest.raises(DeadWorkerSetError):
+            coord.advance(5)
+
+    def test_rejoin_restores_sorted_membership(self):
+        coord = ElasticCoordinator([0, 1, 3])
+        coord.rejoin(2, 7)
+        assert coord.members == (0, 1, 2, 3)
+        assert coord.silent(7) == (0, 1, 3)  # the rejoiner is fresh
+
+    def test_run_boundary_retries_with_backoff(self):
+        sleeps = []
+        coord = ElasticCoordinator(
+            range(2),
+            ElasticConfig(max_retries=3, backoff_base_s=0.01, backoff_max_s=0.02),
+            sleep=sleeps.append,
+        )
+        calls = []
+
+        def fn(attempt):
+            calls.append(attempt)
+            if attempt < 2:
+                raise TransientWorkerError("boundary flake")
+            return "ok"
+
+        assert coord.run_boundary(fn) == "ok"
+        assert calls == [0, 1, 2]
+        assert sleeps == [0.01, 0.02]  # doubled then capped
+
+    def test_run_boundary_exhausts_retries(self):
+        coord = ElasticCoordinator(
+            range(2), ElasticConfig(max_retries=1), sleep=lambda s: None
+        )
+
+        def fn(attempt):
+            raise TransientWorkerError("never recovers")
+
+        with pytest.raises(TransientWorkerError):
+            coord.run_boundary(fn)
+
+
+# ---------------------------------------------------------------------------
+# masked worker_mean (array-axis oracle)
+# ---------------------------------------------------------------------------
+class TestMaskedWorkerMean:
+    def test_all_ones_mask_bit_identical(self):
+        backend = comm.AxisBackend(4)
+        tree = {"w": jnp.arange(12.0).reshape(4, 3), "b": jnp.ones((4,))}
+        plain = backend.worker_mean(tree)
+        masked = backend.worker_mean(tree, mask=jnp.ones((4,), jnp.float32))
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(masked)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mask_drops_straggler(self):
+        backend = comm.AxisBackend(4)
+        x = jnp.arange(12.0).reshape(4, 3)
+        out = backend.worker_mean({"x": x}, mask=jnp.asarray([1, 1, 0, 1], jnp.float32))
+        want = np.asarray(x)[[0, 1, 3]].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(out["x"]), want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# state surgery
+# ---------------------------------------------------------------------------
+def _tiny_params(d=6):
+    return {"w": jnp.linspace(0.5, 1.5, d), "b": jnp.zeros(())}
+
+
+class TestReconfigure:
+    def test_survivor_state_slices_worker_leading(self):
+        cfg = slowmo.preset("local_adam+slowmo", num_workers=4, tau=2)
+        state = slowmo.init_slowmo(cfg, _tiny_params())
+        # give each worker slot a distinguishable value
+        state = state._replace(
+            params=jax.tree.map(
+                lambda x: x + jnp.arange(4.0).reshape((4,) + (1,) * (x.ndim - 1)),
+                state.params,
+            )
+        )
+        surv = survivor_state(cfg, state, [0, 1, 3])
+        for full, cut in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(surv.params)
+        ):
+            np.testing.assert_array_equal(np.asarray(full)[[0, 1, 3]], np.asarray(cut))
+        # adam second moment is worker-leading and sliced too
+        assert all(x.shape[0] == 3 for x in jax.tree.leaves(surv.inner.v))
+        # replicated outer state untouched
+        for a, b in zip(
+            jax.tree.leaves(state.outer_params), jax.tree.leaves(surv.outer_params)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_survivor_state_rejects_out_of_range(self):
+        cfg = slowmo.preset("local_sgd+slowmo", num_workers=4, tau=2)
+        state = slowmo.init_slowmo(cfg, _tiny_params())
+        with pytest.raises(ValueError, match="out of range"):
+            survivor_state(cfg, state, [0, 7])
+
+    def test_resize_requires_exact_average(self):
+        cfg = slowmo.preset("sgp+slowmo-noaverage", num_workers=4, tau=2)
+        state = slowmo.init_slowmo(cfg, _tiny_params())
+        with pytest.raises(ValueError, match="exact_average"):
+            resize_state(cfg, state)
+
+    @pytest.mark.parametrize("new_w", [2, 6])
+    def test_resize_carries_outer_state(self, new_w):
+        cfg4 = slowmo.preset("local_sgd+slowmo", num_workers=4, tau=2)
+        state = slowmo.init_slowmo(cfg4, _tiny_params())
+        state = state._replace(
+            slow_u=jax.tree.map(lambda x: x + 0.25, state.slow_u),
+            step=jnp.asarray(8),
+            outer_step=jnp.asarray(4),
+        )
+        cfg_n = dataclasses.replace(cfg4, num_workers=new_w)
+        resized = resize_state(cfg_n, state)
+        assert all(x.shape[0] == new_w for x in jax.tree.leaves(resized.params))
+        for a, b in zip(
+            jax.tree.leaves(state.slow_u), jax.tree.leaves(resized.slow_u)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(resized.step) == 8 and int(resized.outer_step) == 4
+        # every slot is the broadcast outer iterate
+        for o, p in zip(
+            jax.tree.leaves(state.outer_params), jax.tree.leaves(resized.params)
+        ):
+            for i in range(new_w):
+                np.testing.assert_allclose(
+                    np.asarray(p)[i], np.asarray(o), atol=1e-6
+                )
+
+    def test_admit_keeps_survivors_fills_joiners(self):
+        cfg3 = slowmo.preset("local_sgd+slowmo", num_workers=3, tau=2)
+        state = slowmo.init_slowmo(cfg3, _tiny_params())
+        state = state._replace(
+            params=jax.tree.map(
+                lambda x: x + jnp.arange(3.0).reshape((3,) + (1,) * (x.ndim - 1)),
+                state.params,
+            )
+        )
+        cfg4 = dataclasses.replace(cfg3, num_workers=4)
+        grown = admit_state(cfg4, state, [0, 1, 3], [0, 1, 2, 3])
+        outs = jax.tree.leaves(state.outer_params)
+        for old, new, o in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(grown.params), outs
+        ):
+            old, new = np.asarray(old), np.asarray(new)
+            np.testing.assert_array_equal(new[0], old[0])
+            np.testing.assert_array_equal(new[1], old[1])
+            np.testing.assert_array_equal(new[3], old[2])  # id 3 was slot 2
+            np.testing.assert_allclose(new[2], np.asarray(o), atol=1e-6)  # joiner
+
+    def test_admit_validates_count(self):
+        cfg = slowmo.preset("local_sgd+slowmo", num_workers=3, tau=2)
+        state = slowmo.init_slowmo(cfg, _tiny_params())
+        with pytest.raises(ValueError, match="num_workers"):
+            admit_state(cfg, state, [0, 1, 3], [0, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# cross-worker-count restore
+# ---------------------------------------------------------------------------
+class TestCrossWorkerRestore:
+    @pytest.mark.parametrize("new_w", [2, 6])
+    def test_packed_checkpoint_resumes_on_other_worker_count(self, tmp_path, new_w):
+        """Train packed at W=4, checkpoint, resume at W=2 and W=6 from the
+        replicated outer state: counters and slow momentum carry, and the
+        loss trajectory continues (no re-warmup spike)."""
+        d = 6
+
+        def loss_fn(p, b):
+            return jnp.mean((p["w"] * b - 1.0) ** 2) + p["b"] ** 2
+
+        def batches(seed, w):
+            rng = np.random.default_rng(seed)
+            return jnp.asarray(rng.normal(size=(2, w, 3, d)).astype(np.float32))
+
+        cfg4 = dataclasses.replace(
+            slowmo.preset("local_sgd+slowmo", num_workers=4, tau=2), packed=True
+        )
+        pack = slowmo.make_state_pack_spec(cfg4, _tiny_params(d))
+        state = slowmo.init_slowmo(cfg4, _tiny_params(d), pack=pack)
+        fn4 = jax.jit(slowmo.make_slowmo_round(cfg4, loss_fn, pack=pack))
+        losses = []
+        for r in range(4):
+            state, met = fn4(state, batches(r, 4), 0.1)
+            losses.append(float(met["loss"]))
+        path = str(tmp_path / "ck")
+        ckpt_lib.save_state(path, state, step=4, pack=pack)
+
+        template = slowmo.init_slowmo(
+            dataclasses.replace(cfg4, packed=False), _tiny_params(d)
+        )
+        restored, meta = ckpt_lib.restore_state(path, like=template, pack=pack)
+        assert int(meta["step"]) == 4
+
+        cfg_n = dataclasses.replace(cfg4, num_workers=new_w)
+        resized = resize_state(cfg_n, restored, pack=pack)
+        assert int(resized.outer_step) == int(state.outer_step)
+        fn_n = jax.jit(slowmo.make_slowmo_round(cfg_n, loss_fn, pack=pack))
+        for r in range(4, 7):
+            resized, met = fn_n(resized, batches(r, new_w), 0.1)
+            losses.append(float(met["loss"]))
+        assert all(np.isfinite(losses))
+        # the resumed run keeps descending from the checkpoint, not from
+        # scratch: post-resume losses stay below the run's starting loss
+        assert max(losses[4:]) < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# kill-a-worker integration (subprocess: 8 host devices)
+# ---------------------------------------------------------------------------
+KILL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+from types import SimpleNamespace
+import numpy as np, jax, jax.numpy as jnp
+
+from repro.analysis import contract as contract_mod, hlo, rules
+from repro.core import slowmo
+from repro.distributed import spmd
+from repro.elastic import ElasticConfig, FaultPlan, reconfigure
+from repro.launch import mesh as mesh_lib
+from repro.train import trainer as trainer_lib
+
+D, W, LR = 8, 4, 0.05
+
+def make_model():
+    def init(key):
+        return {"w": jnp.linspace(0.5, 1.5, D)}
+    def loss_fn(p, b):
+        return jnp.mean((p["w"] * b["tokens"] - 1.0) ** 2)
+    return SimpleNamespace(init=init, loss_fn=loss_fn, config=None)
+
+def sampler(r, tau, batch, seq):
+    rng = np.random.default_rng(1000 + r)
+    return jnp.asarray(rng.normal(size=(tau, W, batch, D)).astype(np.float32))
+
+for packed in (False, True):
+    model = make_model()
+    cfg = slowmo.preset("local_sgd+slowmo", W, tau=2)
+    if packed:
+        cfg = dataclasses.replace(cfg, packed=True)
+    lay = mesh_lib.make_spmd_layout(W)
+    tc = trainer_lib.TrainConfig(per_worker_batch=2, seq_len=D, lr=LR, log_every=0)
+    # kill worker 2 at round 3: masked (detection window) at round 3,
+    # evicted at round 4; flaky boundary at round 1 retried twice
+    plan = FaultPlan.parse(["kill:2@3", "flaky:@1*2"])
+    tr = trainer_lib.Trainer(
+        model, cfg, tc, sampler, layout=lay,
+        elastic=ElasticConfig(timeout_rounds=1, backoff_base_s=0.001),
+        faults=plan)
+    final = tr.run(rounds=6)
+    hist = [(h["round"], h["workers"], h["masked_out"]) for h in tr.history]
+    assert hist == [(0, 4, 0), (1, 4, 0), (2, 4, 0), (3, 4, 1), (4, 3, 0), (5, 3, 0)], hist
+
+    # fresh survivor-only oracle: masked full-W rounds 0-3, slice to the
+    # survivors, then a FRESH 3-worker mesh + round for rounds 4-5
+    cfg_m = dataclasses.replace(cfg, masked_average=True)
+    pack = tr.pack
+    st = slowmo.init_slowmo(cfg_m, model.init(None), pack=pack)
+    rf4 = spmd.make_spmd_slowmo_round(cfg_m, model.loss_fn, lay, pack=pack)
+    for r in range(4):
+        b = {"tokens": sampler(r, 2, 2, D)}
+        mask = jnp.asarray([1, 1, 0, 1] if r == 3 else [1, 1, 1, 1], jnp.float32)
+        st, _ = rf4(st, b, LR, mask)
+    surv = reconfigure.survivor_state(cfg_m, st, [0, 1, 3])
+    cfg3 = dataclasses.replace(cfg_m, num_workers=3)
+    lay3 = mesh_lib.make_spmd_layout(3)
+    rf3 = spmd.make_spmd_slowmo_round(cfg3, model.loss_fn, lay3, pack=pack)
+    surv = jax.device_put(surv, spmd.state_shardings(cfg3, lay3, surv))
+    idx = np.asarray([0, 1, 3])
+    for r in range(4, 6):
+        b = {"tokens": jnp.take(sampler(r, 2, 2, D), idx, axis=1)}
+        surv, _ = rf3(surv, b, LR, jnp.ones((3,), jnp.float32))
+
+    for name, a, b in zip(final._fields, final, surv):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), atol=1e-6, rtol=0,
+                err_msg=f"packed={packed} {name}")
+    print("ORACLE-OK", "packed" if packed else "tree")
+
+# ---- no-recompile pins + masked contract audit (tree layout) ---------------
+model = make_model()
+cfg = slowmo.preset("local_sgd+slowmo", W, tau=2)
+cfg_m = dataclasses.replace(cfg, masked_average=True)
+lay = mesh_lib.make_spmd_layout(W)
+b0 = {"tokens": sampler(0, 2, 2, D)}
+
+def fresh():
+    return slowmo.init_slowmo(cfg_m, model.init(None))
+
+# all-ones mask is BIT-identical to the unmasked round
+fn_plain = spmd.make_spmd_slowmo_round(cfg, model.loss_fn, lay)
+fn_mask = spmd.make_spmd_slowmo_round(cfg_m, model.loss_fn, lay)
+s_p, _ = fn_plain(slowmo.init_slowmo(cfg, model.init(None)), b0, LR)
+s_m, _ = fn_mask(fresh(), b0, LR, jnp.ones((W,), jnp.float32))
+for a, bb in zip(jax.tree.leaves(s_p), jax.tree.leaves(s_m)):
+    assert np.array_equal(np.asarray(a), np.asarray(bb))
+print("BIT-IDENTICAL-OK")
+
+# sweeping masks never recompiles: after one warmup call (which commits the
+# state to the mesh) the jit cache size is frozen across arbitrary masks
+built = fn_mask.build(fresh(), b0)
+st, _ = built(fresh(), b0, LR, jnp.ones((W,), jnp.float32))
+st, _ = built(st, b0, LR, jnp.ones((W,), jnp.float32))  # sharded steady state
+warm = built._cache_size()
+for m in ([1, 1, 0, 1], [0, 1, 1, 1], [1, 0, 0, 1]):
+    st, _ = built(st, b0, LR, jnp.asarray(m, jnp.float32))
+assert built._cache_size() == warm, (warm, built._cache_size())
+print("NO-RECOMPILE-OK")
+
+# masked contract audit: the mask-psum budget is exactly what is issued
+lowered = fn_mask.build(fresh(), b0).lower(
+    fresh(), b0, jnp.float32(LR), jnp.ones((W,), jnp.float32))
+issued = hlo.lowered_hlo_text(lowered)
+compiled = lowered.compile().as_text()
+ct = contract_mod.round_contract(cfg_m, lay, params0=model.init(None))
+violations = rules.audit_round(
+    ct, lay.mesh, issued, compiled_text=compiled,
+    leaf_bytes=rules.state_leaf_bytes(fresh()))
+assert not violations, [v.as_dict() for v in violations[:5]]
+# and the budget is load-bearing: dropping mask-psum must surface the psum
+ct_cut = dataclasses.replace(
+    ct, budgets=tuple(bb for bb in ct.budgets if bb.name != "mask-psum"))
+cut = rules.audit_round(ct_cut, lay.mesh, issued)
+assert any(v.rule == "unbudgeted-collective" for v in cut), cut
+print("AUDIT-OK")
+print("ALL-OK")
+"""
+
+
+def test_kill_a_worker_matches_survivor_oracle():
+    proc = subprocess.run(
+        [sys.executable, "-c", KILL_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL-OK" in proc.stdout

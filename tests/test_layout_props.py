@@ -13,9 +13,16 @@ import pytest
 
 from _hyp import given, settings, st
 
+from repro.core import topology
 from repro.core.slowmo import SlowMoConfig
 from repro.distributed import spmd
 from repro.launch.mesh import WorkerLayout, make_layout
+
+#: arbitrary ordered survivor lists: 1..8 distinct, possibly non-contiguous
+#: ids in any order (what an elastic eviction leaves behind)
+survivor_lists = st.lists(
+    st.integers(min_value=0, max_value=31), min_size=1, max_size=8, unique=True
+)
 
 
 class FakeMesh:
@@ -95,6 +102,56 @@ class TestLayoutBookkeeping:
         else:
             with pytest.raises(ValueError, match="divisible"):
                 spmd._validate_batches(layout, batches)
+
+
+class TestSurvivorTopologyProps:
+    """PR 7 elastic invariants: every topology derived from an arbitrary
+    ordered survivor list stays a valid gossip graph of the surviving set."""
+
+    @given(survivors=survivor_lists, k=st.integers(min_value=0, max_value=12))
+    @settings(max_examples=100, deadline=None)
+    def test_mixing_matrix_column_stochastic(self, survivors, k):
+        """P_k of any survivor set is column-stochastic with non-negative
+        entries — mass is conserved no matter who was evicted."""
+        P = topology.mixing_matrix_exponential(survivors, k)
+        m = len(survivors)
+        assert P.shape == (m, m)
+        assert (P >= 0).all()
+        np.testing.assert_allclose(P.sum(axis=0), np.ones(m), atol=1e-12)
+
+    @given(survivors=survivor_lists, k=st.integers(min_value=0, max_value=12))
+    @settings(max_examples=100, deadline=None)
+    def test_ppermute_perm_bijective_on_survivors(self, survivors, k):
+        """The ppermute pairs of any hop are a bijection on the actual
+        surviving ids (sources and dests each cover the set exactly once) —
+        the property lax.ppermute requires of its permutation."""
+        hops = topology.exponential_hops(survivors)
+        hop = hops[k % len(hops)]
+        pairs = topology.ppermute_perm(survivors, hop)
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        assert sorted(srcs) == sorted(survivors)
+        assert sorted(dsts) == sorted(survivors)
+
+    @given(survivors=survivor_lists)
+    @settings(max_examples=100, deadline=None)
+    def test_perm_matches_mixing_matrix(self, survivors):
+        """Every hop phase's permutation pushes along exactly the off-
+        diagonal support of that phase's mixing matrix."""
+        ids = list(survivors)
+        pos = {w: i for i, w in enumerate(ids)}
+        for k, hop in enumerate(topology.exponential_hops(survivors)):
+            P = topology.mixing_matrix_exponential(survivors, k)
+            for s, d in topology.ppermute_perm(survivors, hop):
+                assert P[pos[d], pos[s]] > 0
+
+    def test_survivor_list_rejects_duplicates(self):
+        with pytest.raises(ValueError, match="distinct"):
+            topology.worker_order([0, 1, 1])
+
+    def test_survivor_list_rejects_empty(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            topology.worker_order([])
 
 
 class TestMakeLayoutValidation:
