@@ -158,12 +158,13 @@ def time_fn(fn, state, batches, iters=20, warmup=3):
 
 
 def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters,
-             layout_name="flat"):
-    """One (preset, packed, average_dtype, layout) sweep point."""
+             layout_name="flat", overlap=False):
+    """One (preset, packed, average_dtype, layout, overlap) sweep point."""
     cfg = dataclasses.replace(
         slowmo.preset(preset, num_workers=layout.num_workers, tau=batches["x"].shape[0]),
         packed=packed,
         average_dtype=jnp.bfloat16 if avg_dtype == "bf16" else None,
+        overlap_boundary=overlap,
     )
     # on TP layouts this is the shard-major ShardedPackSpec (global
     # semantics, so the axis-oracle run packs/unpacks through it unchanged)
@@ -202,6 +203,7 @@ def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters
         "batch_shard": layout.batch_shard,
         "packed": packed,
         "average_dtype": avg_dtype,
+        "overlap": overlap,
         "axis_ms": t_axis * 1e3,
         "mesh_ms": t_mesh * 1e3,
         "all_reduce_count": counts["all-reduce"],
@@ -239,6 +241,14 @@ def main():
         "tensor-parallel groups (Megatron MLP, psum over 'model'); records "
         "a tp_vs_flat summary (round-time ratio + the ~1/tp boundary-byte "
         "shrink) alongside hierarchical_vs_flat",
+    )
+    ap.add_argument(
+        "--overlap-boundary",
+        action="store_true",
+        help="also sweep the staleness-1 overlapped boundary (packed f32, "
+        "exact-average presets) and record an overlap_vs_blocking summary: "
+        "the line-6 all-reduce issued before the inner loop and consumed "
+        "after it, so its latency amortizes into the tau inner steps",
     )
     ap.add_argument(
         "--smoke",
@@ -322,13 +332,39 @@ def main():
                         f"cp n={rec['collective_permute_count']}"
                     )
 
+    # overlapped-boundary sweep: same packed f32 cases with the line-6
+    # all-reduce issued at the top of the round (staleness-1) — the census
+    # is identical (same big all-reduce), only the WAIT moves, so the
+    # speedup is the boundary latency amortized into the inner steps.
+    if args.overlap_boundary:
+        for layout_name, layout, (loss_fn, params0, batches) in sweeps:
+            for preset in presets:
+                cfg0 = slowmo.preset(preset, num_workers=layout.num_workers, tau=args.tau)
+                if not cfg0.exact_average:
+                    continue
+                b = batches
+                if cfg0.tau != args.tau:
+                    b = jax.tree.map(lambda x: x[: cfg0.tau], batches)
+                rec = run_case(
+                    preset, True, "f32", layout, loss_fn, params0, b,
+                    args.iters, layout_name=layout_name, overlap=True,
+                )
+                records.append(rec)
+                print(
+                    f"{preset:18s} {layout_name:12s} packed=1 avg=f32 overlap "
+                    f"axis {rec['axis_ms']:8.2f} ms  mesh {rec['mesh_ms']:8.2f} ms  "
+                    f"ar n={rec['all_reduce_count']} big={rec['big_all_reduce_count']} "
+                    f"({rec['big_all_reduce_bytes']} B)"
+                )
+
     # headline comparisons: packed vs per-leaf latency, bf16 traffic halving,
     # flat vs hierarchical round time at matched global batch
-    def find(preset, packed, avg, layout_name="flat"):
+    def find(preset, packed, avg, layout_name="flat", overlap=False):
         for r in records:
-            if (r["preset"], r["packed"], r["average_dtype"], r["layout"]) == (
-                preset, packed, avg, layout_name,
-            ):
+            if (
+                r["preset"], r["packed"], r["average_dtype"], r["layout"],
+                r["overlap"],
+            ) == (preset, packed, avg, layout_name, overlap):
                 return r
         return None
 
@@ -380,6 +416,36 @@ def main():
                 print(
                     f"{preset}: {layout_name}/flat packed mesh round "
                     f"x{summary[summary_key][preset]['mesh_round_ratio']:.2f}"
+                )
+
+    # overlapped vs blocking boundary: same packed f32 round, line-6
+    # all-reduce hidden behind the inner steps (identical traffic — the
+    # big-all-reduce counts must match; only the wait moves)
+    if args.overlap_boundary:
+        for layout_name, _, _ in sweeps:
+            for preset in presets:
+                bl = find(preset, True, "f32", layout_name)
+                ov = find(preset, True, "f32", layout_name, overlap=True)
+                if not (bl and ov):
+                    continue
+                key = preset if layout_name == "flat" else f"{preset}@{layout_name}"
+                summary.setdefault("overlap_vs_blocking", {})[key] = {
+                    "blocking_mesh_ms": bl["mesh_ms"],
+                    "overlap_mesh_ms": ov["mesh_ms"],
+                    "mesh_speedup_overlap": bl["mesh_ms"] / ov["mesh_ms"],
+                    "big_all_reduce_count_blocking": bl["big_all_reduce_count"],
+                    "big_all_reduce_count_overlap": ov["big_all_reduce_count"],
+                    "big_all_reduce_bytes_ratio": (
+                        ov["big_all_reduce_bytes"] / bl["big_all_reduce_bytes"]
+                        if bl["big_all_reduce_bytes"]
+                        else None
+                    ),
+                }
+                print(
+                    f"{key}: overlap mesh round "
+                    f"{bl['mesh_ms']:.2f} -> {ov['mesh_ms']:.2f} ms "
+                    f"(x{bl['mesh_ms'] / ov['mesh_ms']:.2f}), big all-reduces "
+                    f"{bl['big_all_reduce_count']} == {ov['big_all_reduce_count']}"
                 )
 
     # loss_fn-boundary amortization (PR 4): on hierarchical layouts the

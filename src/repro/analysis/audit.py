@@ -25,6 +25,10 @@ mutated case and asserts a nonzero exit):
 * ``masked-average``    — the ``mask-psum`` budget is dropped, so the
                           masked average's participation-weight all-reduce
                           has no home (needs ``--masked masked``)
+* ``stale-boundary``    — the ``boundary-average`` budget is dropped, so
+                          the overlapped round's in-flight stale
+                          all-reduce(-start) has no home (run with
+                          ``--overlap overlap`` to pin the stale path)
 
 The module must be imported before jax configures a backend: it pins
 ``JAX_PLATFORMS=cpu`` (libtpu would probe for accelerators) and forces 8
@@ -62,6 +66,7 @@ MUTATIONS = (
     "donation",
     "large-constant",
     "masked-average",
+    "stale-boundary",
 )
 
 _BATCH = 4
@@ -177,6 +182,13 @@ def _mutate_contract(contract, leaf_bytes, mutation):
                 b for b in contract.budgets if b.name != "mask-psum"
             ),
         )
+    elif mutation == "stale-boundary":
+        contract = dataclasses.replace(
+            contract,
+            budgets=tuple(
+                b for b in contract.budgets if b.name != "boundary-average"
+            ),
+        )
     else:
         raise ValueError(f"unknown mutation {mutation!r}; have {MUTATIONS}")
     return contract, leaf_bytes
@@ -189,14 +201,18 @@ def audit_case(
     tau: int = 2,
     mutation: str | None = None,
     masked: bool = False,
+    overlap: bool = False,
 ) -> dict | None:
     """Lower + compile one round and audit it; returns a JSON-able record.
 
     ``masked=True`` audits the elastic straggler path
     (``cfg.masked_average``, full-participation mask as a traced input) —
-    the contract then budgets the extra ``mask-psum`` all-reduce.  Presets
-    without an exact average have no masked variant; those cases return
-    ``None`` and are skipped."""
+    the contract then budgets the extra ``mask-psum`` all-reduce.
+    ``overlap=True`` audits the staleness-1 round
+    (``cfg.overlap_boundary``) against the SAME contract: the stale
+    boundary average must land in the unchanged ``boundary-average``
+    budget.  Presets without an exact average have no masked or overlap
+    variant; those cases return ``None`` and are skipped."""
     layout = _make_layout(layout_kind)
     problem = _tp_problem() if layout_kind == "tp" else _dense_problem()
     loss_fn, params0, make_batches = problem
@@ -206,6 +222,10 @@ def audit_case(
         if not cfg.exact_average:
             return None
         cfg = dataclasses.replace(cfg, masked_average=True)
+    if overlap:
+        if not cfg.exact_average:
+            return None
+        cfg = dataclasses.replace(cfg, overlap_boundary=True)
     pack = None
     if packed:
         cfg = dataclasses.replace(cfg, packed=True)
@@ -243,6 +263,7 @@ def audit_case(
         "layout": layout_kind,
         "packed": packed,
         "masked": masked,
+        "overlap": overlap,
         "tau": cfg.tau,
         "boundary_bytes": contract.boundary_bytes,
         "n_collectives": len(hlo.collective_ops(issued)),
@@ -289,6 +310,13 @@ def main(argv: list[str] | None = None) -> int:
         help="also audit the elastic straggler path (masked_average=True, "
         "full-participation mask input); exact-average presets only",
     )
+    parser.add_argument(
+        "--overlap",
+        default="blocking",
+        choices=["overlap", "blocking", "both"],
+        help="also audit the staleness-1 round (overlap_boundary=True) "
+        "against the unchanged census; exact-average presets only",
+    )
     parser.add_argument("--tau", type=int, default=2, help="inner steps")
     parser.add_argument(
         "--mutate",
@@ -316,6 +344,11 @@ def main(argv: list[str] | None = None) -> int:
         "unmasked": [False],
         "both": [False, True],
     }[args.masked]
+    overlaps = {
+        "overlap": [True],
+        "blocking": [False],
+        "both": [False, True],
+    }[args.overlap]
 
     cases = []
     total = 0
@@ -323,33 +356,36 @@ def main(argv: list[str] | None = None) -> int:
         for preset_name in presets:
             for packed in packings:
                 for masked in maskings:
-                    case = audit_case(
-                        preset_name,
-                        layout_kind,
-                        packed,
-                        tau=args.tau,
-                        mutation=args.mutate,
-                        masked=masked,
-                    )
-                    if case is None:  # preset has no exact average to mask
-                        continue
-                    cases.append(case)
-                    n = len(case["violations"])
-                    total += n
-                    if not args.json:
-                        tag = (
-                            f"{layout_kind:12s} {preset_name:24s} "
-                            f"{'packed' if packed else 'tree':6s} "
-                            f"{'masked' if masked else '':6s}"
+                    for overlap in overlaps:
+                        case = audit_case(
+                            preset_name,
+                            layout_kind,
+                            packed,
+                            tau=args.tau,
+                            mutation=args.mutate,
+                            masked=masked,
+                            overlap=overlap,
                         )
-                        status = "ok" if n == 0 else f"FAIL ({n})"
-                        print(
-                            f"{status:9s} {tag} "
-                            f"boundary={case['boundary_bytes']}B "
-                            f"collectives={case['n_collectives']}"
-                        )
-                        for v in case["violations"][:8]:
-                            print(f"    {v['rule']}: {v['message']}")
+                        if case is None:  # preset lacks the exact average
+                            continue
+                        cases.append(case)
+                        n = len(case["violations"])
+                        total += n
+                        if not args.json:
+                            tag = (
+                                f"{layout_kind:12s} {preset_name:24s} "
+                                f"{'packed' if packed else 'tree':6s} "
+                                f"{'masked' if masked else '':6s} "
+                                f"{'overlap' if overlap else '':7s}"
+                            )
+                            status = "ok" if n == 0 else f"FAIL ({n})"
+                            print(
+                                f"{status:9s} {tag} "
+                                f"boundary={case['boundary_bytes']}B "
+                                f"collectives={case['n_collectives']}"
+                            )
+                            for v in case["violations"][:8]:
+                                print(f"    {v['rule']}: {v['message']}")
 
     report = {
         "mutation": args.mutate,

@@ -27,6 +27,14 @@ The derivation mirrors the round body (``core.slowmo`` / ``core.gossip`` /
 * the boundary exact average (Algorithm 1 line 6) is one all-reduce per
   state buffer over the WORKER axes only, at ``average_dtype`` (f32 when
   unset) — on packed state that is ONE buffer per dtype group;
+* ``overlap_boundary`` (the staleness-1 round) issues the SAME budget: the
+  average is of last round's snapshot instead of this round's endpoint, is
+  traced before the inner loop, and — having no consumer until after it —
+  lowers as an ``all-reduce-start``/``all-reduce-done`` pair under XLA's
+  latency-hiding scheduler.  ``hlo.collective_ops`` counts the ``-start``
+  form and skips ``-done`` (no new traffic), so the census of every
+  exact-average preset is byte-for-byte invariant under overlap — which is
+  precisely what the audit's ``--overlap`` sweep pins;
 * ``masked_average`` (the elastic straggler mask) adds exactly ONE extra
   4-byte f32 all-reduce over the worker axes per boundary — the
   participation-weight sum the masked ``worker_mean`` divides by
@@ -281,7 +289,11 @@ def round_contract(
         if tp > 1:
             add("drift-model-sum", "all-reduce", max_, (4,), "f32")
 
-    # boundary exact average (Algorithm 1 line 6): worker axes ONLY
+    # boundary exact average (Algorithm 1 line 6): worker axes ONLY.  The
+    # overlap_boundary (staleness-1) round issues the identical budget —
+    # same units, same wire dtype, averaged over the same worker axes —
+    # just of last round's snapshot, lowered as a start/done pair the
+    # census counts once (hlo.collective_ops).  No branch needed here.
     if cfg.exact_average:
         add(
             "boundary-average",

@@ -94,6 +94,29 @@ def bind_loss(loss_fn, backend):
     return bind(backend) if bind is not None else loss_fn
 
 
+class PendingMean:
+    """In-flight handle of a ``worker_mean_start`` call.
+
+    The collective is ISSUED at the program position of the ``start`` call;
+    the handle pins its result until ``worker_mean_done`` consumes it.  The
+    overlap contract lives in the DATAFLOW, not in the handle: because
+    nothing between start and done depends on the averaged value, XLA's
+    latency-hiding scheduler is free to lower the mesh backend's all-reduce
+    as an ``all-reduce-start`` / ``all-reduce-done`` pair that runs behind
+    the intervening compute (the next round's inner steps).  On the axis
+    oracle the mean is simply computed eagerly and held — "an eager mean
+    held one round" — which is the numerical reference for the mesh path.
+
+    Handles are plain trace-time Python objects: they never cross a jit
+    boundary and must be consumed inside the program that issued them.
+    """
+
+    __slots__ = ("tree",)
+
+    def __init__(self, tree: PyTree):
+        self.tree = tree
+
+
 class AxisBackend:
     """Array-axis oracle: workers = leading axis 0 of every leaf."""
 
@@ -176,6 +199,19 @@ class AxisBackend:
             )
 
         return jax.tree.map(avg_masked, tree)
+
+    def worker_mean_start(self, tree: PyTree, dtype=None, mask=None) -> PendingMean:
+        """Kick off an exact worker average without consuming it.
+
+        Oracle semantics: the mean is computed eagerly (same math as
+        ``worker_mean``) and held in a ``PendingMean`` until
+        ``worker_mean_done`` — the stale-boundary overlap's reference
+        backend ("an eager mean held one round")."""
+        return PendingMean(self.worker_mean(tree, dtype, mask=mask))
+
+    def worker_mean_done(self, pending: PendingMean) -> PyTree:
+        """Consume the average a ``worker_mean_start`` issued."""
+        return pending.tree
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         """Every worker slot replaced by the mean; shape preserved."""
@@ -337,6 +373,23 @@ class MeshBackend:
             return (num / wsum.astype(num.dtype)).astype(jnp.float32)
 
         return jax.tree.map(avg_masked, tree)
+
+    def worker_mean_start(self, tree: PyTree, dtype=None, mask=None) -> PendingMean:
+        """Issue the boundary all-reduce HERE, consume it later.
+
+        The ``lax.pmean`` (and, masked, the participation psum) is traced at
+        the call site — the top of the overlapped round, BEFORE the inner
+        loop — with no data dependence on the intervening compute, so XLA
+        lowers it as an async ``all-reduce-start``/``all-reduce-done`` pair
+        scheduled behind the inner steps on async-capable backends.  The
+        census is unchanged: pre-optimization HLO shows the same one
+        all-reduce per unit over the worker axes (``analysis.hlo`` counts
+        ``-start`` forms as the op; ``-done`` carries no new traffic)."""
+        return PendingMean(self.worker_mean(tree, dtype, mask=mask))
+
+    def worker_mean_done(self, pending: PendingMean) -> PyTree:
+        """Consume the average a ``worker_mean_start`` issued."""
+        return pending.tree
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         # worker AND batch axes in ONE collective: for AR gradient averaging

@@ -519,6 +519,14 @@ def unpack_state(spec: PackSpec, state):
         ),
         outer_params=spec.unpack(state.outer_params),
         slow_u=spec.unpack(state.slow_u),
+        boundary=(
+            spec.unpack(state.boundary) if state.boundary is not None else None
+        ),
+        stale_outer=(
+            spec.unpack(state.stale_outer)
+            if state.stale_outer is not None
+            else None
+        ),
     )
 
 
@@ -542,4 +550,12 @@ def pack_state(spec: PackSpec, state):
         ),
         outer_params=spec.pack(state.outer_params, dtype=jnp.float32),
         slow_u=spec.pack(state.slow_u, dtype=jnp.float32),
+        boundary=(
+            spec.pack(state.boundary) if state.boundary is not None else None
+        ),
+        stale_outer=(
+            spec.pack(state.stale_outer, dtype=jnp.float32)
+            if state.stale_outer is not None
+            else None
+        ),
     )

@@ -28,6 +28,14 @@ body is identical (everything here tree-maps), but the boundary then costs
 one kernel launch and ONE collective instead of one per parameter leaf, and
 the tree layout is materialized only at the ``loss_fn`` boundary.
 Equivalence with the tree layout is pinned by ``tests/test_packed.py``.
+
+``overlap_boundary=True`` hides line 6 behind the NEXT round's inner steps
+(staleness 1): the round issues the all-reduce of last round's endpoint
+snapshot before its inner loop and consumes it afterwards, applying lines
+7–8 to double-buffered outer state (``SlowMoState.boundary`` /
+``stale_outer``) — see ``_outer_update_stale`` and
+``docs/architecture.md`` §6.  Stale-vs-exact drift is pinned by
+``repro.analysis.stale_drift`` and ``tests/test_overlap.py``.
 Recovered special cases (tested):
 
 * base='local', tau=1, alpha=1, beta>0 ........ large-batch SGD + momentum
@@ -83,6 +91,12 @@ class SlowMoConfig:
     # the unmasked workers (straggler tolerance; see comm.worker_mean).  An
     # all-ones mask is bit-identical to the unmasked round, and changing the
     # mask never recompiles.  Requires exact_average.
+    overlap_boundary: bool = False  # staleness-1 boundary: the line-6
+    # all-reduce of round t's endpoint is ISSUED at the top of round t+1 and
+    # consumed after its inner steps, so lines 7-8 apply the PREVIOUS round's
+    # average to double-buffered outer state (state.boundary / .stale_outer)
+    # — the collective overlaps the inner compute instead of serializing the
+    # boundary.  Requires exact_average; see comm.worker_mean_start.
 
     def __post_init__(self):
         if self.base not in BASES:
@@ -95,6 +109,11 @@ class SlowMoConfig:
             raise ValueError(
                 "masked_average masks the line-6 exact average; it has no "
                 "meaning under exact_average=False (noaverage)"
+            )
+        if self.overlap_boundary and not self.exact_average:
+            raise ValueError(
+                "overlap_boundary overlaps the line-6 exact average; it has "
+                "no meaning under exact_average=False (noaverage)"
             )
 
     @property
@@ -136,6 +155,17 @@ class SlowMoState(NamedTuple):
     slow_u: PyTree  # u_t, fp32; same layout as outer_params
     step: jnp.ndarray  # global inner step counter
     outer_step: jnp.ndarray  # t
+    # overlap_boundary double buffers (None — i.e. structurally absent —
+    # unless cfg.overlap_boundary; trailing position keeps the leaf order of
+    # every pre-overlap state intact):
+    boundary: PyTree = None  # in-flight boundary snapshot: last round's
+    # (debiased) inner endpoint, (W, ...) at param_dtype — the tree the next
+    # round's stale all-reduce averages
+    stale_outer: PyTree = None  # the outer iterate the snapshot's trajectory
+    # STARTED from (the line-7 anchor), fp32, replicated like outer_params
+    boundary_mask: jnp.ndarray | None = None  # (W,) participation mask
+    # captured WITH the snapshot (masked_average only): the mask rides the
+    # in-flight boundary it masks
 
 
 def _bcast_workers(tree: PyTree, W: int, dtype) -> PyTree:
@@ -206,6 +236,17 @@ def init_slowmo(
             outer = _bcast_workers(params0, W, jnp.float32)
         inner = base_opt.init_inner_state(cfg.inner, params)
     u = jax.tree.map(jnp.zeros_like, outer)
+    boundary = stale = bmask = None
+    if cfg.overlap_boundary:
+        # Round 0's in-flight boundary: a per-worker copy of the initial
+        # iterate anchored at itself, so the first stale update is a no-op
+        # (its pseudo-gradient is exactly zero) and real averages take
+        # effect from round 1 on — staleness-1 from the very first round.
+        # Copies, not aliases: every leaf is donated independently.
+        boundary = jax.tree.map(jnp.copy, params)
+        stale = jax.tree.map(jnp.copy, outer)
+        if cfg.masked_average:
+            bmask = jnp.ones((W,), jnp.float32)
     return SlowMoState(
         params=params,
         inner=inner,
@@ -214,6 +255,9 @@ def init_slowmo(
         slow_u=u,
         step=jnp.zeros((), jnp.int32),
         outer_step=jnp.zeros((), jnp.int32),
+        boundary=boundary,
+        stale_outer=stale,
+        boundary_mask=bmask,
     )
 
 
@@ -306,12 +350,22 @@ def make_inner_step(
     return step_fn
 
 
+def _debias_endpoint(cfg: SlowMoConfig, state: SlowMoState) -> PyTree:
+    """The inner-loop endpoint in iterate space: SGP/OSGP trajectories carry
+    biased params and are de-biased by the push-sum weights; everyone else's
+    params ARE the iterate."""
+    if cfg.gossip_config.kind in ("sgp", "osgp"):
+        return gossip.debias(state.params, state.gossip.w)
+    return state.params
+
+
 def outer_update(
     cfg: SlowMoConfig,
     state: SlowMoState,
     lr,
     backend: comm.CommBackend | None = None,
     mask=None,
+    stale_handle: comm.PendingMean | None = None,
 ) -> SlowMoState:
     """Lines 6–8 of Algorithm 1 plus the buffer strategy (line 2).
 
@@ -324,10 +378,24 @@ def outer_update(
     vector: line 6 becomes the weighted mean over unmasked workers, so a
     straggler's stale contribution drops out; everything downstream (slow
     momentum, broadcast, buffer strategy) is unchanged and the broadcast
-    hands the straggler the fresh averaged iterate — automatic catch-up."""
+    hands the straggler the fresh averaged iterate — automatic catch-up.
+
+    ``cfg.overlap_boundary`` switches to the STALE boundary: the consumed
+    average is last round's in-flight snapshot (``stale_handle``, issued by
+    the round body before the inner loop — or started here for direct
+    callers, losing the overlap but not the numerics), line 7 anchors at
+    ``state.stale_outer`` (the iterate that snapshot's trajectory started
+    from) while line 8 moves the CURRENT ``state.outer_params``, and the
+    double buffers rotate: the new anchor is this round's outer iterate and
+    the new snapshot is this round's (debiased) endpoint.  ``mask`` is then
+    NOT applied to the consumed average (its mask rode in with the
+    snapshot as ``state.boundary_mask``) — it is captured as the mask of
+    the snapshot taken here."""
     from ..kernels import ops as kops  # local import: kernels are optional
 
     backend = backend or comm.AxisBackend(cfg.num_workers)
+    if cfg.overlap_boundary:
+        return _outer_update_stale(cfg, state, lr, backend, mask, stale_handle, kops)
     if cfg.exact_average:
         # Line 6: exact average over the worker axis -> all-reduce.
         if cfg.gossip_config.kind in ("sgp", "osgp"):
@@ -388,6 +456,83 @@ def outer_update(
         slow_u=new_u,
         step=state.step,
         outer_step=state.outer_step + 1,
+    )
+
+
+def _outer_update_stale(
+    cfg: SlowMoConfig, state: SlowMoState, lr, backend, mask, handle, kops
+) -> SlowMoState:
+    """Stale-boundary lines 6–8 (``cfg.overlap_boundary``): consume LAST
+    round's average, rotate the double buffers, snapshot THIS round's
+    endpoint.  See ``outer_update`` for the contract; the index bookkeeping:
+
+        entering round r:  outer O_r, anchor A_r = O_{r-1},
+                           snapshot S_r = round r-1's endpoint (from A_r)
+        u_r     = beta * u_{r-1} + (A_r - avg(S_r)) / gamma      (line 7)
+        O_{r+1} = O_r - alpha * gamma * u_r                      (line 8)
+        rotate:  anchor' = O_r,  snapshot' = round r's endpoint
+    """
+    if handle is None:
+        # direct caller — no round body issued the collective early; start
+        # it here (identical numerics, no overlap to gain)
+        handle = backend.worker_mean_start(
+            state.boundary,
+            cfg.average_dtype,
+            mask=state.boundary_mask if cfg.masked_average else None,
+        )
+    x_tau = backend.worker_mean_done(handle)
+
+    # Line 7 anchored at the snapshot's start iterate.  The fused kernel
+    # moves its x-input (the anchor) — that output is discarded (DCE'd);
+    # only the momentum comes from it, line 8 moves the CURRENT iterate.
+    _, new_u = kops.slowmo_outer_update(
+        state.stale_outer,
+        x_tau,
+        state.slow_u,
+        gamma=lr,
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        use_pallas=cfg.use_pallas,
+    )
+    slow_step = cfg.alpha * lr
+    new_outer = jax.tree.map(
+        lambda o, u: o - slow_step * u, state.outer_params, new_u
+    )
+
+    # rotate the double buffers: the next in-flight snapshot is this round's
+    # (debiased) endpoint, anchored at the iterate its trajectory started
+    # from — the CURRENT outer, captured before line 8 replaced it
+    snapshot = jax.tree.map(
+        lambda x: x.astype(cfg.param_dtype), _debias_endpoint(cfg, state)
+    )
+    new_params = backend.bcast(new_outer, cfg.param_dtype)
+
+    # Line 2 (buffer strategy) and the gossip-weight restart keep their
+    # per-round timing: every round still ends with the outer broadcast.
+    inner = state.inner
+    if cfg.buffer_strategy == "reset":
+        inner = base_opt.reset_buffers(cfg.inner, inner)
+    elif cfg.buffer_strategy == "average":
+        inner = base_opt.average_buffers(inner, backend)
+    gstate = state.gossip
+    if cfg.gossip_config.kind in ("sgp", "osgp"):
+        gstate = gossip.init_gossip_state(
+            cfg.gossip_config, new_params, num_workers=backend.local_workers
+        )
+
+    return SlowMoState(
+        params=new_params,
+        inner=inner,
+        gossip=gstate,
+        outer_params=new_outer,
+        slow_u=new_u,
+        step=state.step,
+        outer_step=state.outer_step + 1,
+        boundary=snapshot,
+        stale_outer=state.outer_params,
+        boundary_mask=(
+            jnp.asarray(mask, jnp.float32) if mask is not None else None
+        ),
     )
 
 
@@ -481,6 +626,18 @@ def make_slowmo_round(
 
     def _round(state: SlowMoState, batches: PyTree, lr, mask):
         lr = jnp.asarray(lr, jnp.float32)
+        pending = None
+        if cfg.overlap_boundary:
+            # issue LAST round's boundary all-reduce before the inner loop:
+            # nothing below depends on its result until the outer update
+            # consumes it, so the collective is free to overlap the tau
+            # inner steps (all-reduce-start/-done on async backends); its
+            # mask rode in with the snapshot it averages
+            pending = backend.worker_mean_start(
+                state.boundary,
+                cfg.average_dtype,
+                mask=state.boundary_mask if cfg.masked_average else None,
+            )
 
         def body(k, acc):
             carry, loss_sum = acc
@@ -529,6 +686,9 @@ def make_slowmo_round(
             slow_u=state.slow_u,
             step=step,
             outer_step=state.outer_step,
+            boundary=state.boundary,
+            stale_outer=state.stale_outer,
+            boundary_mask=state.boundary_mask,
         )
         metrics = {"loss": loss_sum / cfg.tau}
         if cfg.track_drift:
@@ -544,7 +704,9 @@ def make_slowmo_round(
             per_worker = base_opt.make_grad_sq_fn(backend, drift_mask)(diff)
             drift = backend.worker_psum_scalar(jnp.sum(per_worker))
             metrics["drift"] = drift / cfg.num_workers
-        state = outer_update(cfg, state, lr, backend, mask=mask)
+        state = outer_update(
+            cfg, state, lr, backend, mask=mask, stale_handle=pending
+        )
         return state, metrics
 
     if cfg.masked_average:

@@ -269,6 +269,19 @@ def slowmo_state_specs(layout: WorkerLayout, state_shapes, *, shard_outer: bool 
         slow_u=u_specs,
         step=P(),
         outer_step=P(),
+        # overlap_boundary double buffers: snapshot like params, anchor
+        # like the (replicated) outer iterate, mask over the worker axes
+        boundary=(
+            _specs_for_tree(state_shapes.boundary, M, prefix=wax)
+            if state_shapes.boundary is not None
+            else None
+        ),
+        stale_outer=(
+            outer_specs if state_shapes.stale_outer is not None else None
+        ),
+        boundary_mask=(
+            P(*wax) if state_shapes.boundary_mask is not None else None
+        ),
     )
 
 
@@ -360,6 +373,15 @@ def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyT
         slow_u=outer(state.slow_u),
         step=P(),
         outer_step=P(),
+        # overlap_boundary double buffers (None — an empty subtree — when
+        # off): the in-flight snapshot shards like params, its anchor
+        # replicates like the outer iterate (overlap requires
+        # exact_average), and the riding mask shards like the mask input
+        boundary=wtree(state.boundary),
+        stale_outer=rep(state.stale_outer),
+        boundary_mask=(
+            None if state.boundary_mask is None else P(wentry)
+        ),
     )
 
 

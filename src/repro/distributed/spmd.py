@@ -56,6 +56,16 @@ derives ``slowmo.TPMasks`` (which leaves are model-sharded) from the same
 rules that sharded the state, so both reductions psum sharded-leaf
 contributions over ``model`` and count replicated leaves exactly once —
 pinned against the TP-free mesh by ``tests/test_unified_tp.py``.
+
+``overlap_boundary`` configs run through the same wrapper unchanged: the
+double-buffered overlap state (``boundary``, worker-sharded like params;
+``stale_outer``, replicated; ``boundary_mask``, worker-sharded) picks up
+its specs from ``sharding.spmd_state_specs``, rides the same state
+donation (its leaves append after the blocking leaves, so existing alias
+indices are stable), and the stale average — traced before the inner loop
+with no consumer until after it — is free to lower as an
+``all-reduce-start``/``-done`` pair (docs/architecture.md §6, pinned by
+``tests/test_overlap.py``).
 """
 from __future__ import annotations
 

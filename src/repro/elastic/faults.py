@@ -84,6 +84,25 @@ class FaultPlan:
                     f"bad fault spec {spec!r} (want kill:W@R, delay:W@R+S, "
                     "flaky:@R*N, rejoin:W@R)"
                 )
+            # the regex is permissive by construction (one pattern for four
+            # kinds); the per-kind rules live here so the errors can say
+            # WHICH part is wrong
+            kind = m["kind"]
+            if kind != "flaky" and not m["worker"]:
+                raise ValueError(
+                    f"bad fault spec {spec!r}: {kind} needs an explicit "
+                    f"worker id ({kind}:W@R) — an empty id would silently "
+                    "target worker 0"
+                )
+            if m["steps"] is not None and kind != "delay":
+                raise ValueError(
+                    f"bad fault spec {spec!r}: +STEPS only applies to "
+                    "delay:W@R+S"
+                )
+            if m["attempts"] is not None and kind != "flaky":
+                raise ValueError(
+                    f"bad fault spec {spec!r}: *N only applies to flaky:@R*N"
+                )
             events.append(
                 FaultEvent(
                     kind=m["kind"],

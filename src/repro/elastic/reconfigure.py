@@ -2,9 +2,11 @@
 
 A ``SlowMoState`` carries the worker count in exactly three places — the
 leading worker axis of per-worker components (``params``, the inner
-optimizer buffers, the gossip weights), the replicated outer state
-(``outer_params``, ``slow_u``; worker-axis-free under ``exact_average``),
-and the scalar counters.  Reconfiguration is therefore pure slicing and
+optimizer buffers, the gossip weights, and under ``overlap_boundary`` the
+in-flight ``boundary`` snapshot plus its ``boundary_mask``), the
+replicated outer state (``outer_params``, ``slow_u``, the stale anchor
+``stale_outer``; worker-axis-free under ``exact_average``), and the
+scalar counters.  Reconfiguration is therefore pure slicing and
 broadcasting, all of it derivable at a round boundary:
 
 * ``survivor_state`` — EVICTION: select the survivor slots along the
@@ -64,6 +66,15 @@ def _map_worker_leading(cfg: SlowMoConfig, state: SlowMoState, f) -> SlowMoState
         slow_u=state.slow_u if replicated_outer else f(state.slow_u),
         step=state.step,
         outer_step=state.outer_step,
+        # overlap_boundary: the in-flight snapshot and its riding mask are
+        # worker-leading and slice like params — evicting a worker drops its
+        # contribution from the pending stale average exactly like the
+        # masked average would; the anchor is replicated and carries over
+        boundary=f(state.boundary) if state.boundary is not None else None,
+        stale_outer=state.stale_outer,
+        boundary_mask=(
+            f(state.boundary_mask) if state.boundary_mask is not None else None
+        ),
     )
 
 
@@ -177,4 +188,12 @@ def admit_state(
         slow_u=fresh.slow_u,
         step=state.step,
         outer_step=state.outer_step,
+        # overlap_boundary: a membership change FLUSHES the in-flight
+        # boundary — the old snapshot averages over the wrong worker set, so
+        # the rejoined round restarts from the fresh (anchor == outer)
+        # double buffer and the next stale update is a clean no-op.  One
+        # round of inner progress is dropped; see docs/architecture.md §6.
+        boundary=fresh.boundary,
+        stale_outer=fresh.stale_outer,
+        boundary_mask=fresh.boundary_mask,
     )

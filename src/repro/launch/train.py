@@ -46,6 +46,14 @@ def main():
         help="flat-buffer state: one kernel launch and one collective per "
         "SlowMo boundary instead of one per parameter leaf",
     )
+    ap.add_argument(
+        "--overlap-boundary",
+        action="store_true",
+        help="staleness-1 boundary: issue the line-6 exact average at the "
+        "top of the round and consume it after the inner steps, so the "
+        "slow-momentum update applies the PREVIOUS round's average "
+        "(docs/architecture.md section 6); exact-average algos only",
+    )
     ap.add_argument("--ckpt", default="")
     ap.add_argument(
         "--mesh",
@@ -157,6 +165,7 @@ def main():
         alpha=args.alpha,
         param_dtype=cfg.dtype if args.full else jnp.float32,
         packed=args.packed,
+        overlap_boundary=args.overlap_boundary,
     )
     tc = TrainConfig(
         total_rounds=args.rounds, per_worker_batch=args.batch, seq_len=args.seq,

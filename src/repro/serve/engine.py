@@ -43,7 +43,9 @@ class DecodeEngine:
     ) -> tuple[jnp.ndarray, dict]:
         B, P = prompts.shape
         cache = self.model.init_cache(B, self.cfg.max_len)
-        key = key or jax.random.PRNGKey(self.cfg.seed)
+        # `key or ...` would call bool() on a shape-(2,) key array and raise
+        if key is None:
+            key = jax.random.PRNGKey(self.cfg.seed)
         t0 = time.perf_counter()
 
         # prefill: feed prompt tokens one at a time (decode-path prefill)

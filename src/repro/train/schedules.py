@@ -20,9 +20,13 @@ def warmup_step_decay(base_lr: float, warmup_steps: int, decay_steps: tuple[int,
 def inverse_sqrt(base_lr: float, warmup_steps: int):
     """Transformer schedule (paper's WMT setting, Ott et al. 2018)."""
 
+    # warmup_steps=0 means "no warmup", not a div-by-zero: same guard as
+    # warmup_step_decay (step 1 is then already past the warmup knee)
+    warm = max(warmup_steps, 1)
+
     def lr(step):
         step = jnp.asarray(step, jnp.float32) + 1.0
-        return base_lr * jnp.minimum(step / warmup_steps, (warmup_steps / step) ** 0.5)
+        return base_lr * jnp.minimum(step / warm, (warm / step) ** 0.5)
 
     return lr
 

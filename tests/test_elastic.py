@@ -56,10 +56,33 @@ class TestFaultPlan:
         assert plan.rejoins(6) == (2,)
         assert plan.flaky_attempts(1) == 2
 
-    @pytest.mark.parametrize("bad", ["kill:2", "evict:1@2", "kill:2@3+1x"])
+    @pytest.mark.parametrize(
+        "bad",
+        [
+            "kill:2",
+            "evict:1@2",
+            "kill:2@3+1x",
+            # empty worker id only means something for flaky (the boundary
+            # fails, nobody in particular) — kill/delay/rejoin targeting
+            # worker 0 by omission was a silent footgun
+            "kill:@5",
+            "rejoin:@1",
+            "delay:@2+3",
+            # kind-invalid suffixes: +STEPS is delay-only, *N is flaky-only
+            "kill:2@3*5",
+            "kill:2@3+1",
+            "rejoin:1@2*3",
+            "flaky:@1+2",
+        ],
+    )
     def test_parse_rejects(self, bad):
         with pytest.raises(ValueError, match="bad fault spec"):
             FaultPlan.parse([bad])
+
+    def test_parse_flaky_worker_id_still_optional(self):
+        plan = FaultPlan.parse(["flaky:@2*3", "flaky:1@4*1"])
+        assert plan.flaky_attempts(2) == 3
+        assert plan.flaky_attempts(4) == 1
 
     def test_event_validation(self):
         with pytest.raises(ValueError, match="unknown fault kind"):

@@ -1,0 +1,358 @@
+"""Overlapped stale-boundary round (``SlowMoConfig.overlap_boundary``).
+
+Pins the staleness-1 protocol of docs/architecture.md §6:
+
+* blocking configs carry NO overlap buffers (the trailing state fields are
+  None — leaf structure, checkpoints, and donation untouched);
+* round 0 of an overlapped run is an exact outer no-op (the init double
+  buffer satisfies anchor == snapshot average);
+* every subsequent round applies lines 7-8 to the PREVIOUS round's
+  average: the update is reproduced leaf-exactly from the pre-round
+  double buffer (boundary, stale anchor, mask) by a manual oracle,
+  including the masked-average composition where the mask rides the
+  snapshot it masks;
+* packed and tree layouts agree; the mesh (shard_map) backend agrees with
+  the array-axis oracle (subprocess, 8 host devices);
+* the 3-round stale-vs-exact drift stays under the bound
+  ``repro.analysis.stale_drift`` pins, and the audit sweep is clean for
+  the overlap census while the ``stale-boundary`` mutation fails
+  (subprocess: the audit module forces an 8-device host platform).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import stale_drift
+from repro.core import packing, slowmo
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+W, D, B, TAU = 4, 16, 4, 3
+
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params():
+    return {
+        "w": 0.3 * jax.random.normal(jax.random.PRNGKey(0), (D, D)),
+        "b": jnp.zeros((D,)),
+    }
+
+
+def make_batches(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (TAU, W, B, D))
+    return {"x": x, "y": jnp.sum(x, -1, keepdims=True) * 0.1}
+
+
+def overlap_cfg(**overrides):
+    return dataclasses.replace(
+        slowmo.preset("local_sgd+slowmo", num_workers=W, tau=TAU),
+        overlap_boundary=True,
+        **overrides,
+    )
+
+
+def assert_tree_close(a, b, atol=1e-6, msg=""):
+    for (path, x), y in zip(
+        jax.tree_util.tree_flatten_with_path(a)[0], jax.tree.leaves(b)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32),
+            np.asarray(y, np.float32),
+            atol=atol,
+            rtol=1e-6,
+            err_msg=f"{msg}{jax.tree_util.keystr(path)}",
+        )
+
+
+class TestConfigAndState:
+    def test_overlap_requires_exact_average(self):
+        with pytest.raises(ValueError, match="overlap_boundary"):
+            dataclasses.replace(
+                slowmo.preset("sgp+slowmo-noaverage", num_workers=W),
+                overlap_boundary=True,
+            )
+
+    def test_blocking_state_has_no_overlap_buffers(self):
+        cfg = slowmo.preset("local_sgd+slowmo", num_workers=W, tau=TAU)
+        st = slowmo.init_slowmo(cfg, make_params())
+        assert st.boundary is None
+        assert st.stale_outer is None
+        assert st.boundary_mask is None
+        # None subtrees are leafless: a blocking state flattens exactly as
+        # it did before the overlap fields existed (checkpoints, donation
+        # indices, and spec trees are untouched)
+        n_overlap = len(jax.tree.leaves((st.boundary, st.stale_outer)))
+        assert n_overlap == 0
+
+    def test_overlap_state_double_buffer_init(self):
+        cfg = overlap_cfg()
+        params0 = make_params()
+        st = slowmo.init_slowmo(cfg, params0)
+        # snapshot = the broadcast params, anchor = the outer iterate: the
+        # round-0 stale update then sees anchor == avg(snapshot) (no-op)
+        assert_tree_close(st.boundary, st.params, msg="boundary ")
+        assert_tree_close(st.stale_outer, st.outer_params, msg="anchor ")
+        assert st.boundary_mask is None  # masked_average only
+
+
+class TestStaleSemantics:
+    def test_round0_outer_noop(self):
+        cfg = overlap_cfg()
+        st0 = slowmo.init_slowmo(cfg, make_params())
+        fn = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
+        st1, _ = fn(st0, make_batches(0), 0.1)
+        # lines 7-8 consumed the INIT snapshot (== broadcast outer): outer
+        # iterate and broadcast params must come back bit-identical, with
+        # round 0's inner progress living only in the rotated snapshot
+        assert_tree_close(st1.outer_params, st0.outer_params, msg="outer ")
+        assert_tree_close(st1.slow_u, st0.slow_u, msg="slow_u ")
+        assert_tree_close(st1.params, st0.params, msg="params ")
+        assert int(st1.outer_step) == 1
+        # ...and the snapshot DID rotate (it is round 0's inner endpoint)
+        moved = sum(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(
+                jax.tree.leaves(st1.boundary), jax.tree.leaves(st0.boundary)
+            )
+        )
+        assert moved > 1e-4
+
+    def test_stale_update_matches_manual_oracle(self):
+        cfg = overlap_cfg()
+        st = slowmo.init_slowmo(cfg, make_params())
+        fn = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
+        lr = 0.1
+        for r in range(3):
+            prev = st
+            st, _ = fn(st, make_batches(r), lr)
+            avg = jax.tree.map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0), prev.boundary
+            )
+            u = jax.tree.map(
+                lambda un, a, m: cfg.beta * un + (a - m) / lr,
+                prev.slow_u,
+                prev.stale_outer,
+                avg,
+            )
+            outer = jax.tree.map(
+                lambda o, un: o - cfg.alpha * lr * un, prev.outer_params, u
+            )
+            assert_tree_close(st.slow_u, u, atol=1e-5, msg=f"r{r} slow_u ")
+            assert_tree_close(st.outer_params, outer, atol=1e-5, msg=f"r{r} outer ")
+            assert_tree_close(st.stale_outer, prev.outer_params, msg=f"r{r} anchor ")
+            bcast = jax.tree.map(
+                lambda o: jnp.broadcast_to(o, (W,) + o.shape).astype(cfg.param_dtype),
+                outer,
+            )
+            assert_tree_close(st.params, bcast, atol=1e-5, msg=f"r{r} params ")
+
+    def test_mask_rides_the_boundary_it_masks(self):
+        cfg = overlap_cfg(masked_average=True)
+        st = slowmo.init_slowmo(cfg, make_params())
+        assert st.boundary_mask is not None
+        np.testing.assert_array_equal(np.asarray(st.boundary_mask), np.ones((W,)))
+        fn = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
+        lr = 0.1
+        masks = [
+            jnp.ones((W,), jnp.float32),
+            jnp.asarray([1.0, 0.0, 1.0, 1.0], jnp.float32),
+            jnp.ones((W,), jnp.float32),
+        ]
+        for r, mask in enumerate(masks):
+            prev = st
+            st, _ = fn(st, make_batches(r), lr, mask)
+            # the average consumed this round is weighted by the mask
+            # CAPTURED with the snapshot (last round's input), not this
+            # round's input...
+            m = prev.boundary_mask
+            avg = jax.tree.map(
+                lambda x: jnp.tensordot(m, x.astype(jnp.float32), axes=(0, 0))
+                / jnp.sum(m),
+                prev.boundary,
+            )
+            u = jax.tree.map(
+                lambda un, a, mm: cfg.beta * un + (a - mm) / lr,
+                prev.slow_u,
+                prev.stale_outer,
+                avg,
+            )
+            assert_tree_close(st.slow_u, u, atol=1e-5, msg=f"r{r} slow_u ")
+            # ...and this round's input mask rode out with the new snapshot
+            np.testing.assert_array_equal(
+                np.asarray(st.boundary_mask), np.asarray(mask), err_msg=f"r{r}"
+            )
+
+    def test_packed_overlap_matches_tree(self):
+        cfg_t = overlap_cfg()
+        cfg_p = dataclasses.replace(cfg_t, packed=True)
+        params0 = make_params()
+        spec = slowmo.make_state_pack_spec(cfg_p, params0)
+        st_t = slowmo.init_slowmo(cfg_t, params0)
+        st_p = slowmo.init_slowmo(cfg_p, params0, pack=spec)
+        fn_t = jax.jit(slowmo.make_slowmo_round(cfg_t, loss_fn))
+        fn_p = jax.jit(slowmo.make_slowmo_round(cfg_p, loss_fn, pack=spec))
+        for r in range(3):
+            b = make_batches(r)
+            st_t, met_t = fn_t(st_t, b, 0.1)
+            st_p, met_p = fn_p(st_p, b, 0.1)
+        up = packing.unpack_state(spec, st_p)
+        flat_t, _ = jax.tree_util.tree_flatten_with_path(st_t)
+        flat_p = jax.tree.leaves(up)
+        assert len(flat_t) == len(flat_p)
+        for (path, a), m in zip(flat_t, flat_p):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32),
+                np.asarray(m, np.float32),
+                atol=1e-5,
+                rtol=1e-5,
+                err_msg=jax.tree_util.keystr(path),
+            )
+        assert abs(float(met_t["loss"]) - float(met_p["loss"])) < 1e-5
+
+    def test_three_round_drift_within_pinned_bound(self):
+        report = stale_drift.measure_drift(rounds=3)
+        assert report["outer_rel_drift"] <= stale_drift.DEFAULT_BOUND, report
+        # staleness-1, not staleness-anything: round 0 must agree exactly
+        assert report["losses"][0]["exact"] == pytest.approx(
+            report["losses"][0]["stale"]
+        )
+
+
+# ---------------------------------------------------------------------------
+# subprocess: mesh backend + audit CLI (both force multi-device host
+# platforms, which must never leak into this pytest process — conftest)
+# ---------------------------------------------------------------------------
+def _run(script_or_args):
+    if isinstance(script_or_args, str):
+        argv = [sys.executable, "-c", script_or_args]
+    else:
+        argv = [sys.executable] + script_or_args
+    return subprocess.run(
+        argv,
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            # keep libtpu from probing the GCP metadata server for minutes
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+
+
+MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo
+from repro.core import slowmo
+from repro.distributed import spmd
+from repro.launch.mesh import make_spmd_layout
+
+W, D, B = 8, 32, 4
+
+def loss_fn(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+def make_batches(seed, tau):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (tau, W, B, D))
+    return {"x": x, "y": jnp.sum(x, -1, keepdims=True) * 0.1}
+
+cfg = dataclasses.replace(
+    slowmo.preset("local_sgd+slowmo", num_workers=W, tau=3),
+    overlap_boundary=True,
+)
+params0 = {"w": 0.3 * jax.random.normal(jax.random.PRNGKey(0), (D, D)),
+           "b": jnp.zeros((D,))}
+layout = make_spmd_layout(W)
+state_a = slowmo.init_slowmo(cfg, params0)
+state_m = jax.tree.map(jnp.array, state_a)  # fn_m donates its state
+fn_a = jax.jit(slowmo.make_slowmo_round(cfg, loss_fn))
+fn_m = spmd.make_spmd_slowmo_round(cfg, loss_fn, layout)
+
+b0 = make_batches(0, cfg.tau)
+lowered = fn_m.build(state_m, b0).lower(state_m, b0, jnp.float32(0.1))
+ars = [op for op in hlo.collective_ops(hlo.lowered_hlo_text(lowered))
+       if op["op"] == "all-reduce"]
+sizes = sorted(op["bytes"] for op in ars)
+# scalar loss pmean + the stale boundary average of both leaves (b: 128 B,
+# w: 4096 B) — the overlapped round still issues the full line-6 budget
+assert sizes == [4, 128, 4096], sizes
+
+for r in range(3):
+    b = make_batches(r, cfg.tau)
+    state_a, met_a = fn_a(state_a, b, 0.1)
+    state_m, met_m = fn_m(state_m, b, 0.1)
+flat_a, _ = jax.tree_util.tree_flatten_with_path(state_a)
+flat_m = jax.tree.leaves(state_m)
+assert len(flat_a) == len(flat_m)
+for (path, a), m in zip(flat_a, flat_m):
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(m, np.float32),
+        atol=1e-5, rtol=1e-5, err_msg=jax.tree_util.keystr(path))
+print("MESH-OVERLAP-OK")
+"""
+
+
+def test_mesh_overlap_matches_axis_oracle():
+    proc = _run(MESH_SCRIPT)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH-OVERLAP-OK" in proc.stdout
+
+
+def test_audit_overlap_clean():
+    proc = _run(
+        [
+            "-m",
+            "repro.analysis.audit",
+            "--presets",
+            "local_sgd+slowmo",
+            "--layouts",
+            "flat",
+            "--packed",
+            "packed",
+            "--overlap",
+            "both",
+            "--masked",
+            "both",
+        ]
+    )
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-2000:]
+    assert "0 violation(s)" in proc.stdout
+
+
+def test_audit_stale_boundary_mutation_must_fail():
+    proc = _run(
+        [
+            "-m",
+            "repro.analysis.audit",
+            "--presets",
+            "local_sgd+slowmo",
+            "--layouts",
+            "flat",
+            "--packed",
+            "packed",
+            "--overlap",
+            "overlap",
+            "--mutate",
+            "stale-boundary",
+        ]
+    )
+    assert proc.returncode != 0, proc.stdout[-3000:]
+    assert "FAIL" in proc.stdout

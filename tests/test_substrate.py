@@ -129,6 +129,20 @@ class TestServe:
         np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
         assert s1["tokens_per_s"] > 0
 
+    def test_generate_accepts_explicit_key_when_sampling(self):
+        """Regression: `key = key or PRNGKey(...)` called bool() on the
+        shape-(2,) key array and raised; an explicit key with
+        temperature > 0 must sample, deterministically per key."""
+        cfg = get_config("qwen3-4b", reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = DecodeEngine(model, params, ServeConfig(max_len=32, temperature=0.8))
+        prompts = jnp.ones((2, 4), jnp.int32)
+        g1, _ = eng.generate(prompts, 8, key=jax.random.PRNGKey(5))
+        g2, _ = eng.generate(prompts, 8, key=jax.random.PRNGKey(5))
+        assert g1.shape == (2, 8)
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
     def test_encoder_only_rejected(self):
         cfg = get_config("hubert-xlarge", reduced=True)
         model = build_model(cfg)

@@ -48,6 +48,17 @@ class TestScheduleValues:
         assert float(lr(15)) == pytest.approx(0.5)  # peak at warmup end
         assert float(lr(63)) == pytest.approx(0.25)  # (16/64)^0.5
 
+    def test_zero_warmup_means_no_warmup(self):
+        """warmup_steps=0 is 'start decaying immediately', not a crash:
+        inverse_sqrt used to divide by zero where warmup_step_decay already
+        guarded with max(warmup_steps, 1)."""
+        inv = schedules.inverse_sqrt(0.5, 0)
+        assert float(inv(0)) == pytest.approx(0.5)  # peak at step 1
+        assert float(inv(3)) == pytest.approx(0.25)  # (1/4)^0.5
+        step = schedules.warmup_step_decay(1.0, 0, (100,))
+        assert float(step(0)) == pytest.approx(1.0)
+        assert float(step(150)) == pytest.approx(0.1)
+
 
 class TestLRInnerStepUnits:
     def test_trainer_feeds_inner_steps_not_rounds(self):
