@@ -158,13 +158,14 @@ def time_fn(fn, state, batches, iters=20, warmup=3):
 
 
 def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters,
-             layout_name="flat", overlap=False):
-    """One (preset, packed, average_dtype, layout, overlap) sweep point."""
+             layout_name="flat", overlap=False, compress=None):
+    """One (preset, packed, average_dtype, layout, overlap, compress) point."""
     cfg = dataclasses.replace(
         slowmo.preset(preset, num_workers=layout.num_workers, tau=batches["x"].shape[0]),
         packed=packed,
         average_dtype=jnp.bfloat16 if avg_dtype == "bf16" else None,
         overlap_boundary=overlap,
+        compress_ratio=compress,
     )
     # on TP layouts this is the shard-major ShardedPackSpec (global
     # semantics, so the axis-oracle run packs/unpacks through it unchanged)
@@ -204,12 +205,15 @@ def run_case(preset, packed, avg_dtype, layout, loss_fn, params0, batches, iters
         "packed": packed,
         "average_dtype": avg_dtype,
         "overlap": overlap,
+        "compress_ratio": compress,
         "axis_ms": t_axis * 1e3,
         "mesh_ms": t_mesh * 1e3,
         "all_reduce_count": counts["all-reduce"],
         "all_reduce_bytes": cb["all-reduce"],
         "big_all_reduce_count": sum(1 for s in sizes["all-reduce"] if s > BIG),
         "big_all_reduce_bytes": sum(s for s in sizes["all-reduce"] if s > BIG),
+        "all_gather_count": counts["all-gather"],
+        "all_gather_bytes": cb["all-gather"],
         "collective_permute_count": counts["collective-permute"],
         "collective_permute_bytes": cb["collective-permute"],
     }
@@ -249,6 +253,17 @@ def main():
         "exact-average presets) and record an overlap_vs_blocking summary: "
         "the line-6 all-reduce issued before the inner loop and consumed "
         "after it, so its latency amortizes into the tau inner steps",
+    )
+    ap.add_argument(
+        "--compress-ratio",
+        type=float,
+        default=None,
+        help="also sweep the top-k compressed boundary (packed f32, "
+        "exact-average presets) at this surviving fraction and record a "
+        "compression summary: the dense boundary all-reduce replaced by "
+        "two statically shaped (values, indices) all-gathers, with "
+        "topk_traffic_ratio = per-worker payload bytes / dense boundary "
+        "bytes recorded next to bf16_traffic_ratio",
     )
     ap.add_argument(
         "--smoke",
@@ -357,14 +372,41 @@ def main():
                     f"({rec['big_all_reduce_bytes']} B)"
                 )
 
+    # top-k compressed boundary sweep: same packed f32 cases with the dense
+    # line-6 all-reduce replaced by two statically shaped (values, indices)
+    # all-gathers of each worker's magnitude top-k boundary delta plus its
+    # error-feedback residual (docs/architecture.md section 7).
+    if args.compress_ratio is not None:
+        for layout_name, layout, (loss_fn, params0, batches) in sweeps:
+            for preset in presets:
+                cfg0 = slowmo.preset(preset, num_workers=layout.num_workers, tau=args.tau)
+                if not cfg0.exact_average:
+                    continue
+                b = batches
+                if cfg0.tau != args.tau:
+                    b = jax.tree.map(lambda x: x[: cfg0.tau], batches)
+                rec = run_case(
+                    preset, True, "f32", layout, loss_fn, params0, b,
+                    args.iters, layout_name=layout_name,
+                    compress=args.compress_ratio,
+                )
+                records.append(rec)
+                print(
+                    f"{preset:18s} {layout_name:12s} packed=1 avg=f32 "
+                    f"topk={args.compress_ratio} "
+                    f"axis {rec['axis_ms']:8.2f} ms  mesh {rec['mesh_ms']:8.2f} ms  "
+                    f"ag n={rec['all_gather_count']} ({rec['all_gather_bytes']} B)  "
+                    f"big ar n={rec['big_all_reduce_count']}"
+                )
+
     # headline comparisons: packed vs per-leaf latency, bf16 traffic halving,
     # flat vs hierarchical round time at matched global batch
-    def find(preset, packed, avg, layout_name="flat", overlap=False):
+    def find(preset, packed, avg, layout_name="flat", overlap=False, compress=None):
         for r in records:
             if (
                 r["preset"], r["packed"], r["average_dtype"], r["layout"],
-                r["overlap"],
-            ) == (preset, packed, avg, layout_name, overlap):
+                r["overlap"], r["compress_ratio"],
+            ) == (preset, packed, avg, layout_name, overlap, compress):
                 return r
         return None
 
@@ -446,6 +488,47 @@ def main():
                     f"{bl['mesh_ms']:.2f} -> {ov['mesh_ms']:.2f} ms "
                     f"(x{bl['mesh_ms'] / ov['mesh_ms']:.2f}), big all-reduces "
                     f"{bl['big_all_reduce_count']} == {ov['big_all_reduce_count']}"
+                )
+
+    # top-k compressed vs dense boundary: per-worker all-gather payload
+    # (values + indices) against the dense boundary all-reduce the
+    # compressed round dropped.  topk_traffic_ratio also lands in the
+    # per-preset block next to bf16_traffic_ratio.
+    if args.compress_ratio is not None:
+        for layout_name, _, _ in sweeps:
+            for preset in presets:
+                bl = find(preset, True, "f32", layout_name)
+                c = find(preset, True, "f32", layout_name, compress=args.compress_ratio)
+                if not (bl and c):
+                    continue
+                key = preset if layout_name == "flat" else f"{preset}@{layout_name}"
+                # the dense boundary is exactly the big-all-reduce traffic the
+                # compressed round no longer issues (per-step gradient
+                # all-reduces survive in both census sides and cancel)
+                dense_boundary = (
+                    bl["big_all_reduce_bytes"] - c["big_all_reduce_bytes"]
+                )
+                # all-gather RESULT bytes are W x the per-worker shard; the
+                # wire payload per worker is one shard per gather
+                payload = c["all_gather_bytes"] // max(c["num_workers"], 1)
+                ratio = payload / dense_boundary if dense_boundary > 0 else None
+                summary.setdefault("compression", {})[key] = {
+                    "compress_ratio": args.compress_ratio,
+                    "all_gather_count": c["all_gather_count"],
+                    "all_gather_bytes": c["all_gather_bytes"],
+                    "boundary_payload_bytes": payload,
+                    "dense_boundary_bytes": dense_boundary,
+                    "topk_traffic_ratio": ratio,
+                    "blocking_mesh_ms": bl["mesh_ms"],
+                    "compressed_mesh_ms": c["mesh_ms"],
+                }
+                if key in summary and ratio is not None:
+                    summary[key]["topk_traffic_ratio"] = ratio
+                print(
+                    f"{key}: topk@{args.compress_ratio} boundary payload "
+                    f"{payload} B / dense {dense_boundary} B"
+                    + (f" = x{ratio:.3f}" if ratio is not None else "")
+                    + f", ag n={c['all_gather_count']}"
                 )
 
     # loss_fn-boundary amortization (PR 4): on hierarchical layouts the

@@ -39,11 +39,65 @@ def roofline_row(r):
     )
 
 
+def print_bench_round(path="BENCH_packed_round.json"):
+    """§Boundary bench: the packed-round sweep's headline ratios (packed
+    speedup, bf16 halving, topology trades, overlap hiding, top-k payload
+    shrink).  Silent no-op when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    summary = json.load(open(path)).get("summary", {})
+    presets = {
+        k: v for k, v in summary.items()
+        if isinstance(v, dict) and "mesh_speedup_packed" in v
+    }
+    print(f"\n## §Boundary bench — {path}\n")
+    if presets:
+        print("| preset | packed mesh speedup | big ARs tree->packed | bf16 traffic | topk traffic |")
+        print("|---|---|---|---|---|")
+        for key, s in presets.items():
+            bf16 = s.get("bf16_traffic_ratio")
+            topk = s.get("topk_traffic_ratio")
+            print(
+                f"| {key} | x{s['mesh_speedup_packed']:.2f} | "
+                f"{s['big_all_reduce_count_tree']} -> {s['big_all_reduce_count_packed']} | "
+                f"{'x%.2f' % bf16 if bf16 is not None else '—'} | "
+                f"{'x%.3f' % topk if topk is not None else '—'} |"
+            )
+    for section, label in (
+        ("hierarchical_vs_flat", "hierarchical/flat packed mesh round"),
+        ("tp_vs_flat", "tp/flat packed mesh round"),
+    ):
+        for preset, s in summary.get(section, {}).items():
+            br = s.get("big_all_reduce_bytes_ratio")
+            print(
+                f"- {label} ({preset}): x{s['mesh_round_ratio']:.2f} round time"
+                + (f", x{br:.2f} boundary bytes" if br is not None else "")
+            )
+    for key, s in summary.get("overlap_vs_blocking", {}).items():
+        print(
+            f"- overlap ({key}): {s['blocking_mesh_ms']:.2f} -> "
+            f"{s['overlap_mesh_ms']:.2f} ms mesh round "
+            f"(x{s['mesh_speedup_overlap']:.2f}), big ARs "
+            f"{s['big_all_reduce_count_blocking']} == "
+            f"{s['big_all_reduce_count_overlap']}"
+        )
+    for key, s in summary.get("compression", {}).items():
+        tr = s.get("topk_traffic_ratio")
+        print(
+            f"- topk@{s['compress_ratio']} ({key}): boundary payload "
+            f"{s['boundary_payload_bytes']} B / dense "
+            f"{s['dense_boundary_bytes']} B"
+            + (f" = x{tr:.3f}" if tr is not None else "")
+            + f", {s['all_gather_count']} all-gathers"
+        )
+
+
 def main():
     single_unrolled = load_dir("artifacts/dryrun_single")
     single_rolled = load_dir("artifacts/dryrun_single_rolled")
     multi = load_dir("artifacts/dryrun_multi")
     perf = load_perf()
+    print_bench_round()
 
     print("\n## §Roofline — generated table\n")
     print("Single-pod 16x16 mesh, per-device terms.  `src` = unrolled (roofline-"

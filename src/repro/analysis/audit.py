@@ -29,6 +29,12 @@ mutated case and asserts a nonzero exit):
                           the overlapped round's in-flight stale
                           all-reduce(-start) has no home (run with
                           ``--overlap overlap`` to pin the stale path)
+* ``dense-boundary``    — the ``boundary-gather``/``-idx`` budgets are
+                          swapped for a phantom dense ``boundary-average``
+                          all-reduce: the compressed round's sparse
+                          all-gathers become unbudgeted AND the phantom
+                          dense op is missing (run with ``--compressed
+                          compressed`` to pin the sparse path)
 
 The module must be imported before jax configures a backend: it pins
 ``JAX_PLATFORMS=cpu`` (libtpu would probe for accelerators) and forces 8
@@ -67,7 +73,20 @@ MUTATIONS = (
     "large-constant",
     "masked-average",
     "stale-boundary",
+    "dense-boundary",
 )
+
+#: audit_case flags each mutation needs to exercise the path it breaks
+#: (tests/test_audit_mutations.py sweeps this alongside MUTATIONS)
+MUTATION_FLAGS = {
+    "masked-average": {"masked": True},
+    "stale-boundary": {"overlap": True},
+    "dense-boundary": {"compressed": True},
+}
+
+#: compress_ratio used by the --compressed sweep: any ratio < 1 exercises
+#: the sparse path; 0.25 keeps the tiny audit problems' k well-defined
+AUDIT_COMPRESS_RATIO = 0.25
 
 _BATCH = 4
 _DIM = 16
@@ -189,6 +208,26 @@ def _mutate_contract(contract, leaf_bytes, mutation):
                 b for b in contract.budgets if b.name != "boundary-average"
             ),
         )
+    elif mutation == "dense-boundary":
+        # pretend the boundary were dense: drop the sparse-gather budgets
+        # and demand a phantom dense all-reduce — the issued all-gathers
+        # become unbudgeted AND the all-reduce comes up missing
+        phantom = contract_mod.Budget(
+            name="boundary-average",
+            op="all-reduce",
+            axes=contract.worker_axes,
+            sizes=(123456,),
+            dtype="f32",
+        )
+        contract = dataclasses.replace(
+            contract,
+            budgets=tuple(
+                b
+                for b in contract.budgets
+                if not b.name.startswith("boundary-gather")
+            )
+            + (phantom,),
+        )
     else:
         raise ValueError(f"unknown mutation {mutation!r}; have {MUTATIONS}")
     return contract, leaf_bytes
@@ -202,6 +241,7 @@ def audit_case(
     mutation: str | None = None,
     masked: bool = False,
     overlap: bool = False,
+    compressed: bool = False,
 ) -> dict | None:
     """Lower + compile one round and audit it; returns a JSON-able record.
 
@@ -211,8 +251,11 @@ def audit_case(
     ``overlap=True`` audits the staleness-1 round
     (``cfg.overlap_boundary``) against the SAME contract: the stale
     boundary average must land in the unchanged ``boundary-average``
-    budget.  Presets without an exact average have no masked or overlap
-    variant; those cases return ``None`` and are skipped."""
+    budget.  ``compressed=True`` audits the sparse boundary
+    (``cfg.compress_ratio``): the dense ``boundary-average`` budget is
+    replaced by the ``boundary-gather``/``-idx`` all-gather pair per unit.
+    Presets without an exact average have no masked, overlap, or
+    compressed variant; those cases return ``None`` and are skipped."""
     layout = _make_layout(layout_kind)
     problem = _tp_problem() if layout_kind == "tp" else _dense_problem()
     loss_fn, params0, make_batches = problem
@@ -226,6 +269,10 @@ def audit_case(
         if not cfg.exact_average:
             return None
         cfg = dataclasses.replace(cfg, overlap_boundary=True)
+    if compressed:
+        if not cfg.exact_average:
+            return None
+        cfg = dataclasses.replace(cfg, compress_ratio=AUDIT_COMPRESS_RATIO)
     pack = None
     if packed:
         cfg = dataclasses.replace(cfg, packed=True)
@@ -264,8 +311,10 @@ def audit_case(
         "packed": packed,
         "masked": masked,
         "overlap": overlap,
+        "compressed": compressed,
         "tau": cfg.tau,
         "boundary_bytes": contract.boundary_bytes,
+        "boundary_gather_bytes": contract.boundary_gather_bytes,
         "n_collectives": len(hlo.collective_ops(issued)),
         "violations": rules.as_report(violations),
     }
@@ -317,6 +366,14 @@ def main(argv: list[str] | None = None) -> int:
         help="also audit the staleness-1 round (overlap_boundary=True) "
         "against the unchanged census; exact-average presets only",
     )
+    parser.add_argument(
+        "--compressed",
+        default="dense",
+        choices=["compressed", "dense", "both"],
+        help="also audit the sparse boundary (compress_ratio set): the "
+        "dense boundary all-reduce budget becomes the boundary-gather "
+        "all-gather pair; exact-average presets only",
+    )
     parser.add_argument("--tau", type=int, default=2, help="inner steps")
     parser.add_argument(
         "--mutate",
@@ -349,6 +406,11 @@ def main(argv: list[str] | None = None) -> int:
         "blocking": [False],
         "both": [False, True],
     }[args.overlap]
+    compressions = {
+        "compressed": [True],
+        "dense": [False],
+        "both": [False, True],
+    }[args.compressed]
 
     cases = []
     total = 0
@@ -357,35 +419,42 @@ def main(argv: list[str] | None = None) -> int:
             for packed in packings:
                 for masked in maskings:
                     for overlap in overlaps:
-                        case = audit_case(
-                            preset_name,
-                            layout_kind,
-                            packed,
-                            tau=args.tau,
-                            mutation=args.mutate,
-                            masked=masked,
-                            overlap=overlap,
-                        )
-                        if case is None:  # preset lacks the exact average
-                            continue
-                        cases.append(case)
-                        n = len(case["violations"])
-                        total += n
-                        if not args.json:
-                            tag = (
-                                f"{layout_kind:12s} {preset_name:24s} "
-                                f"{'packed' if packed else 'tree':6s} "
-                                f"{'masked' if masked else '':6s} "
-                                f"{'overlap' if overlap else '':7s}"
+                        for compressed in compressions:
+                            case = audit_case(
+                                preset_name,
+                                layout_kind,
+                                packed,
+                                tau=args.tau,
+                                mutation=args.mutate,
+                                masked=masked,
+                                overlap=overlap,
+                                compressed=compressed,
                             )
-                            status = "ok" if n == 0 else f"FAIL ({n})"
-                            print(
-                                f"{status:9s} {tag} "
-                                f"boundary={case['boundary_bytes']}B "
-                                f"collectives={case['n_collectives']}"
-                            )
-                            for v in case["violations"][:8]:
-                                print(f"    {v['rule']}: {v['message']}")
+                            if case is None:  # preset lacks the exact average
+                                continue
+                            cases.append(case)
+                            n = len(case["violations"])
+                            total += n
+                            if not args.json:
+                                tag = (
+                                    f"{layout_kind:12s} {preset_name:24s} "
+                                    f"{'packed' if packed else 'tree':6s} "
+                                    f"{'masked' if masked else '':6s} "
+                                    f"{'overlap' if overlap else '':7s} "
+                                    f"{'topk' if compressed else '':4s}"
+                                )
+                                status = "ok" if n == 0 else f"FAIL ({n})"
+                                boundary = (
+                                    f"gather={case['boundary_gather_bytes']}B"
+                                    if compressed
+                                    else f"boundary={case['boundary_bytes']}B"
+                                )
+                                print(
+                                    f"{status:9s} {tag} {boundary} "
+                                    f"collectives={case['n_collectives']}"
+                                )
+                                for v in case["violations"][:8]:
+                                    print(f"    {v['rule']}: {v['message']}")
 
     report = {
         "mutation": args.mutate,

@@ -39,6 +39,14 @@ The derivation mirrors the round body (``core.slowmo`` / ``core.gossip`` /
   4-byte f32 all-reduce over the worker axes per boundary — the
   participation-weight sum the masked ``worker_mean`` divides by
   (``mask-psum``);
+* ``compress_ratio`` REPLACES the dense boundary all-reduce with exactly
+  TWO all-gathers per unit over the worker axes — the top-k values at the
+  wire dtype (``boundary-gather``) and their s32 positions
+  (``boundary-gather-idx``) — sized by ``kernels.topk_compress.
+  payload_spec``; ``hlo.collective_ops`` records all-gather RESULT bytes,
+  i.e. n_worker_devices × the per-device payload.  Masked and overlapped
+  variants compose unchanged (the mask-psum stays; start/done counting is
+  the same as for all-reduce);
 * ``buffer_strategy='average'`` adds one all-reduce per momentum buffer
   (plus second moments under Adam) over worker+batch axes;
 * ``track_drift`` adds a second worker-mean of the params, a 4-byte worker
@@ -132,12 +140,26 @@ class Contract:
             sum(b.sizes) for b in self.budgets if b.name == "boundary-average"
         )
 
+    @property
+    def boundary_gather_bytes(self) -> int:
+        """Expected GATHERED bytes of the compressed boundary's all-gathers
+        (values + indices budgets).  This is the all-gather RESULT size the
+        HLO census sees — n_worker_devices × the per-device payload; divide
+        by the worker-device count for the on-the-wire payload a device
+        actually contributes."""
+        return sum(
+            sum(b.sizes)
+            for b in self.budgets
+            if b.name.startswith("boundary-gather")
+        )
+
     def describe(self) -> dict:
         return {
             "worker_axes": list(self.worker_axes),
             "batch_axes": list(self.batch_axes),
             "model_axes": list(self.model_axes),
             "boundary_bytes": self.boundary_bytes,
+            "boundary_gather_bytes": self.boundary_gather_bytes,
             "budgets": [dataclasses.asdict(b) for b in self.budgets],
             "allowances": [dataclasses.asdict(a) for a in self.allowances],
         }
@@ -295,15 +317,39 @@ def round_contract(
     # just of last round's snapshot, lowered as a start/done pair the
     # census counts once (hlo.collective_ops).  No branch needed here.
     if cfg.exact_average:
-        add(
-            "boundary-average",
-            "all-reduce",
-            wax,
-            tuple(u * avg_size for u in units),
-            avg_name,
-        )
+        ratio = getattr(cfg, "compress_ratio", None)
+        if ratio is not None:
+            # compressed boundary (comm.worker_mean_sparse): per unit, TWO
+            # all-gathers over the worker axes — top-k values at the wire
+            # dtype and their s32 block positions — replace the dense
+            # all-reduce.  Budget sizes are the GATHERED result bytes
+            # (what hlo.collective_ops records for all-gather): worker
+            # devices × local workers × blocks × k per unit.
+            from repro.kernels import topk_compress
+
+            num_worker_devices = int(
+                np.prod([layout.mesh.shape[a] for a in wax], dtype=np.int64)
+            )
+            local_w = max(W // max(num_worker_devices, 1), 1)
+            val_sizes, idx_sizes = [], []
+            for u in units:
+                blocks, _, k = topk_compress.payload_spec(u, ratio)
+                payload = num_worker_devices * local_w * blocks * k
+                val_sizes.append(payload * avg_size)
+                idx_sizes.append(payload * 4)
+            add("boundary-gather", "all-gather", wax, tuple(val_sizes), avg_name)
+            add("boundary-gather-idx", "all-gather", wax, tuple(idx_sizes), "s32")
+        else:
+            add(
+                "boundary-average",
+                "all-reduce",
+                wax,
+                tuple(u * avg_size for u in units),
+                avg_name,
+            )
         # elastic straggler mask: the masked worker_mean sums the
-        # participation weights once per boundary (comm.MeshBackend)
+        # participation weights once per boundary (comm.MeshBackend);
+        # the compressed path divides by the same participant count
         if getattr(cfg, "masked_average", False):
             add("mask-psum", "all-reduce", wax, (4,), "f32")
 

@@ -81,8 +81,38 @@ import jax
 import jax.numpy as jnp
 
 from . import topology
+from repro.kernels import topk_compress
 
 PyTree = Any
+
+
+def _sparse_payload(x, r, ratio, use_pallas):
+    """Per-slot top-k payload of the error-feedback signal.
+
+    ``x`` is a (L, ...) boundary-delta leaf, ``r`` its residual (same
+    shape, f32).  The transmitted signal is ``x + r``; its magnitude top-k
+    payload crosses the wire, and the untransmitted remainder becomes the
+    new residual — no signal is silently dropped, it is delayed.  Returns
+    ``(values, indices, spec, new_residual)`` with (L, blocks, k) payloads.
+    """
+    sig = x.astype(jnp.float32) + r
+    L = sig.shape[0]
+    vals, idx, spec = topk_compress.sparsify_batch(
+        sig.reshape(L, -1), ratio, use_pallas=use_pallas
+    )
+    blocks, be, _ = spec
+    dense = topk_compress.reconstruct(vals, idx, be)
+    new_resid = (sig.reshape(L, blocks, be) - dense).reshape(sig.shape)
+    return vals, idx, spec, new_resid
+
+
+def _split_pairs(pairs: PyTree) -> tuple[PyTree, PyTree]:
+    """Unzip a tree of (a, b) leaf pairs into two trees."""
+    is_pair = lambda p: isinstance(p, tuple)  # noqa: E731
+    return (
+        jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair),
+        jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair),
+    )
 
 
 def bind_loss(loss_fn, backend):
@@ -212,6 +242,65 @@ class AxisBackend:
     def worker_mean_done(self, pending: PendingMean) -> PyTree:
         """Consume the average a ``worker_mean_start`` issued."""
         return pending.tree
+
+    def worker_mean_sparse(
+        self,
+        tree: PyTree,
+        residual: PyTree,
+        ratio: float,
+        dtype=None,
+        mask=None,
+        use_pallas: bool = False,
+    ) -> tuple[PyTree, PyTree]:
+        """Compressed exact average with error feedback (DeMo-style top-k).
+
+        Per worker slot: signal = leaf + residual; the per-block magnitude
+        top-k payload of the signal is what would cross the wire (``dtype``
+        is the wire precision of the VALUES; indices are always s32), and
+        signal − sparse(signal) becomes the new residual.  Returns
+        ``(mean_tree, new_residual)``: the (mask-weighted) mean of the
+        sparsified signals with the leading worker axis dropped, plus the
+        per-worker residual to carry.  The oracle compresses eagerly —
+        the numerical reference for the mesh all-gather path.  At
+        ratio=1.0 every entry survives and the mean equals the dense
+        ``worker_mean`` of signal to f32 rounding.
+        """
+        wsum = (
+            jnp.sum(mask.astype(jnp.float32))
+            if mask is not None
+            else jnp.float32(self.num_workers)
+        )
+
+        def one(x, r):
+            vals, idx, spec, new_resid = _sparse_payload(x, r, ratio, use_pallas)
+            acc = vals.astype(dtype) if dtype is not None else vals
+            if mask is not None:
+                acc = acc * mask.astype(acc.dtype).reshape(-1, 1, 1)
+            dense = topk_compress.reconstruct(
+                acc.astype(jnp.float32), idx, spec[1]
+            )
+            mean = jnp.sum(dense, axis=0) / wsum
+            return mean.reshape(x.shape[1:]).astype(jnp.float32), new_resid
+
+        return _split_pairs(jax.tree.map(one, tree, residual))
+
+    def worker_mean_sparse_start(
+        self,
+        tree: PyTree,
+        residual: PyTree,
+        ratio: float,
+        dtype=None,
+        mask=None,
+        use_pallas: bool = False,
+    ) -> tuple[PendingMean, PyTree]:
+        """Sparse variant of ``worker_mean_start``: kick off the compressed
+        average, return ``(handle, new_residual)``.  The residual update is
+        immediate (it is local); only the mean is held for
+        ``worker_mean_done``."""
+        mean, new_resid = self.worker_mean_sparse(
+            tree, residual, ratio, dtype, mask=mask, use_pallas=use_pallas
+        )
+        return PendingMean(mean), new_resid
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         """Every worker slot replaced by the mean; shape preserved."""
@@ -390,6 +479,74 @@ class MeshBackend:
     def worker_mean_done(self, pending: PendingMean) -> PyTree:
         """Consume the average a ``worker_mean_start`` issued."""
         return pending.tree
+
+    def worker_mean_sparse(
+        self,
+        tree: PyTree,
+        residual: PyTree,
+        ratio: float,
+        dtype=None,
+        mask=None,
+        use_pallas: bool = False,
+    ) -> tuple[PyTree, PyTree]:
+        """Compressed exact average: all-gather the sparse payload instead
+        of all-reducing the dense buffer.
+
+        Each device sparsifies its local workers' error-feedback signal
+        (signal = leaf + residual; remainder → new residual, kept local),
+        then TWO all-gathers per unit cross the worker axes — the values
+        at the wire ``dtype`` and the s32 indices — shrinking boundary
+        traffic to ``payload/dense ∝ k / block_elems`` (budgeted by the
+        contract as ``boundary-gather`` / ``boundary-gather-idx``).  Every
+        device reconstructs the dense sum from the full payload locally
+        and divides by the participant count.  ``mask`` scales each
+        worker's VALUES before the gather (masked-out workers transmit
+        zeros) — after the residual update, so stragglers keep
+        accumulating their error feedback — and the divisor becomes the
+        ``mask-psum`` participant count, exactly like masked
+        ``worker_mean``.
+        """
+        wsum = (
+            jax.lax.psum(jnp.sum(mask.astype(jnp.float32)), self.axis_entry)
+            if mask is not None
+            else jnp.float32(self.num_workers)
+        )
+
+        def one(x, r):
+            vals, idx, spec, new_resid = _sparse_payload(x, r, ratio, use_pallas)
+            acc = vals.astype(dtype) if dtype is not None else vals
+            if mask is not None:
+                acc = acc * mask.astype(acc.dtype).reshape(-1, 1, 1)
+            vals_g = jax.lax.all_gather(acc, self.axis_entry, tiled=True)
+            idx_g = jax.lax.all_gather(idx, self.axis_entry, tiled=True)
+            dense = topk_compress.reconstruct(
+                vals_g.astype(jnp.float32), idx_g, spec[1]
+            )
+            mean = jnp.sum(dense, axis=0) / wsum
+            return mean.reshape(x.shape[1:]).astype(jnp.float32), new_resid
+
+        return _split_pairs(jax.tree.map(one, tree, residual))
+
+    def worker_mean_sparse_start(
+        self,
+        tree: PyTree,
+        residual: PyTree,
+        ratio: float,
+        dtype=None,
+        mask=None,
+        use_pallas: bool = False,
+    ) -> tuple[PendingMean, PyTree]:
+        """Issue the sparse boundary gathers HERE, consume the mean later.
+
+        Same dataflow contract as ``worker_mean_start``: the all-gathers
+        are traced at the call site with no dependence on the intervening
+        compute, so XLA may lower them as async start/done pairs hidden
+        behind the inner steps.  The residual update is local and returned
+        immediately."""
+        mean, new_resid = self.worker_mean_sparse(
+            tree, residual, ratio, dtype, mask=mask, use_pallas=use_pallas
+        )
+        return PendingMean(mean), new_resid
 
     def mean_keepdims(self, x: jnp.ndarray) -> jnp.ndarray:
         # worker AND batch axes in ONE collective: for AR gradient averaging

@@ -527,6 +527,9 @@ def unpack_state(spec: PackSpec, state):
             if state.stale_outer is not None
             else None
         ),
+        residual=(
+            spec.unpack(state.residual) if state.residual is not None else None
+        ),
     )
 
 
@@ -556,6 +559,11 @@ def pack_state(spec: PackSpec, state):
         stale_outer=(
             spec.pack(state.stale_outer, dtype=jnp.float32)
             if state.stale_outer is not None
+            else None
+        ),
+        residual=(
+            spec.pack(state.residual, dtype=jnp.float32)
+            if state.residual is not None
             else None
         ),
     )

@@ -97,6 +97,15 @@ class SlowMoConfig:
     # average to double-buffered outer state (state.boundary / .stale_outer)
     # — the collective overlaps the inner compute instead of serializing the
     # boundary.  Requires exact_average; see comm.worker_mean_start.
+    compress_ratio: float | None = None  # DeMo-style top-k boundary
+    # compression: line 6 averages the magnitude top-k payload of each
+    # worker's boundary DELTA (endpoint − outer anchor) plus its error-
+    # feedback residual (SlowMoState.residual), all-gathering sparse
+    # (values, indices) payloads instead of all-reducing the dense buffer
+    # (see comm.worker_mean_sparse / kernels.topk_compress).  The ratio is
+    # the surviving fraction per block; 1.0 keeps every entry (≡ dense to
+    # f32 rounding), None disables.  Requires exact_average.  Composes
+    # with masked_average and overlap_boundary.
 
     def __post_init__(self):
         if self.base not in BASES:
@@ -115,6 +124,16 @@ class SlowMoConfig:
                 "overlap_boundary overlaps the line-6 exact average; it has "
                 "no meaning under exact_average=False (noaverage)"
             )
+        if self.compress_ratio is not None:
+            if not self.exact_average:
+                raise ValueError(
+                    "compress_ratio compresses the line-6 exact average; it "
+                    "has no meaning under exact_average=False (noaverage)"
+                )
+            if not (0.0 < self.compress_ratio <= 1.0):
+                raise ValueError(
+                    f"compress_ratio must be in (0, 1], got {self.compress_ratio}"
+                )
 
     @property
     def gossip_config(self) -> GossipConfig:
@@ -166,6 +185,12 @@ class SlowMoState(NamedTuple):
     boundary_mask: jnp.ndarray | None = None  # (W,) participation mask
     # captured WITH the snapshot (masked_average only): the mask rides the
     # in-flight boundary it masks
+    residual: PyTree = None  # compress_ratio only: per-worker error-feedback
+    # remainder, (W, ...) fp32, shaped like params — the part of each
+    # boundary signal the top-k payload did NOT transmit, added back into
+    # the next round's signal so no update is silently dropped.  Packs,
+    # shards, and checkpoints like slow momentum (trailing position keeps
+    # pre-compression leaf order intact).
 
 
 def _bcast_workers(tree: PyTree, W: int, dtype) -> PyTree:
@@ -247,6 +272,16 @@ def init_slowmo(
         stale = jax.tree.map(jnp.copy, outer)
         if cfg.masked_average:
             bmask = jnp.ones((W,), jnp.float32)
+    residual = None
+    if cfg.compress_ratio is not None:
+        # error feedback starts empty: round 0's signal is exactly its delta
+        residual = (
+            pack.zeros(lead=(W,), dtype=jnp.float32)
+            if cfg.packed
+            else jax.tree.map(
+                lambda x: jnp.zeros((W,) + x.shape, jnp.float32), params0
+            )
+        )
     return SlowMoState(
         params=params,
         inner=inner,
@@ -258,6 +293,7 @@ def init_slowmo(
         boundary=boundary,
         stale_outer=stale,
         boundary_mask=bmask,
+        residual=residual,
     )
 
 
@@ -396,7 +432,31 @@ def outer_update(
     backend = backend or comm.AxisBackend(cfg.num_workers)
     if cfg.overlap_boundary:
         return _outer_update_stale(cfg, state, lr, backend, mask, stale_handle, kops)
-    if cfg.exact_average:
+    new_resid = state.residual
+    if cfg.exact_average and cfg.compress_ratio is not None:
+        # Compressed line 6: average the top-k payload of each worker's
+        # DELTA against the shared outer anchor (plus its error-feedback
+        # residual), then rebuild x_tau = anchor + mean(sparse delta).
+        # Compressing the delta, not the iterate, is what makes top-k
+        # meaningful — the delta is the tau-step movement, small and
+        # concentrated, while the iterate's energy is everywhere.
+        delta = jax.tree.map(
+            lambda e, o: e.astype(jnp.float32) - o[None],
+            _debias_endpoint(cfg, state),
+            state.outer_params,
+        )
+        mean_delta, new_resid = backend.worker_mean_sparse(
+            delta,
+            state.residual,
+            cfg.compress_ratio,
+            cfg.average_dtype,
+            mask=mask,
+            use_pallas=cfg.use_pallas,
+        )
+        x_tau = jax.tree.map(
+            lambda o, d: o + d, state.outer_params, mean_delta
+        )
+    elif cfg.exact_average:
         # Line 6: exact average over the worker axis -> all-reduce.
         if cfg.gossip_config.kind in ("sgp", "osgp"):
             x_tau = backend.worker_mean(
@@ -456,6 +516,7 @@ def outer_update(
         slow_u=new_u,
         step=state.step,
         outer_step=state.outer_step + 1,
+        residual=new_resid,
     )
 
 
@@ -472,15 +533,36 @@ def _outer_update_stale(
         O_{r+1} = O_r - alpha * gamma * u_r                      (line 8)
         rotate:  anchor' = O_r,  snapshot' = round r's endpoint
     """
+    new_resid = state.residual
     if handle is None:
         # direct caller — no round body issued the collective early; start
         # it here (identical numerics, no overlap to gain)
-        handle = backend.worker_mean_start(
-            state.boundary,
-            cfg.average_dtype,
-            mask=state.boundary_mask if cfg.masked_average else None,
+        if cfg.compress_ratio is not None:
+            handle, new_resid = backend.worker_mean_sparse_start(
+                _stale_delta(state),
+                state.residual,
+                cfg.compress_ratio,
+                cfg.average_dtype,
+                mask=state.boundary_mask if cfg.masked_average else None,
+                use_pallas=cfg.use_pallas,
+            )
+        else:
+            handle = backend.worker_mean_start(
+                state.boundary,
+                cfg.average_dtype,
+                mask=state.boundary_mask if cfg.masked_average else None,
+            )
+    if cfg.compress_ratio is not None:
+        # the in-flight value is the mean sparse DELTA against the anchor
+        # the snapshot's trajectory started from; rebuild the averaged
+        # endpoint at that same anchor (line 7 then subtracts it again)
+        x_tau = jax.tree.map(
+            lambda o, d: o + d,
+            state.stale_outer,
+            backend.worker_mean_done(handle),
         )
-    x_tau = backend.worker_mean_done(handle)
+    else:
+        x_tau = backend.worker_mean_done(handle)
 
     # Line 7 anchored at the snapshot's start iterate.  The fused kernel
     # moves its x-input (the anchor) — that output is discarded (DCE'd);
@@ -533,6 +615,17 @@ def _outer_update_stale(
         boundary_mask=(
             jnp.asarray(mask, jnp.float32) if mask is not None else None
         ),
+        residual=new_resid,
+    )
+
+
+def _stale_delta(state: SlowMoState) -> PyTree:
+    """The in-flight snapshot's delta against the anchor its trajectory
+    started from — the signal the compressed stale boundary averages."""
+    return jax.tree.map(
+        lambda b, o: b.astype(jnp.float32) - o[None],
+        state.boundary,
+        state.stale_outer,
     )
 
 
@@ -627,17 +720,30 @@ def make_slowmo_round(
     def _round(state: SlowMoState, batches: PyTree, lr, mask):
         lr = jnp.asarray(lr, jnp.float32)
         pending = None
+        new_resid = state.residual
         if cfg.overlap_boundary:
             # issue LAST round's boundary all-reduce before the inner loop:
             # nothing below depends on its result until the outer update
             # consumes it, so the collective is free to overlap the tau
             # inner steps (all-reduce-start/-done on async backends); its
-            # mask rode in with the snapshot it averages
-            pending = backend.worker_mean_start(
-                state.boundary,
-                cfg.average_dtype,
-                mask=state.boundary_mask if cfg.masked_average else None,
-            )
+            # mask rode in with the snapshot it averages.  Compressed, the
+            # in-flight value is the mean sparse DELTA of the snapshot
+            # against its anchor; the residual update is local and lands in
+            # the mid-round state below.
+            bmask = state.boundary_mask if cfg.masked_average else None
+            if cfg.compress_ratio is not None:
+                pending, new_resid = backend.worker_mean_sparse_start(
+                    _stale_delta(state),
+                    state.residual,
+                    cfg.compress_ratio,
+                    cfg.average_dtype,
+                    mask=bmask,
+                    use_pallas=cfg.use_pallas,
+                )
+            else:
+                pending = backend.worker_mean_start(
+                    state.boundary, cfg.average_dtype, mask=bmask
+                )
 
         def body(k, acc):
             carry, loss_sum = acc
@@ -689,6 +795,7 @@ def make_slowmo_round(
             boundary=state.boundary,
             stale_outer=state.stale_outer,
             boundary_mask=state.boundary_mask,
+            residual=new_resid,
         )
         metrics = {"loss": loss_sum / cfg.tau}
         if cfg.track_drift:

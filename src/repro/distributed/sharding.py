@@ -282,6 +282,13 @@ def slowmo_state_specs(layout: WorkerLayout, state_shapes, *, shard_outer: bool 
         boundary_mask=(
             P(*wax) if state_shapes.boundary_mask is not None else None
         ),
+        # compression residual: per-worker like params (error feedback is
+        # local to the worker that accumulated it)
+        residual=(
+            _specs_for_tree(state_shapes.residual, M, prefix=wax)
+            if state_shapes.residual is not None
+            else None
+        ),
     )
 
 
@@ -382,6 +389,9 @@ def spmd_state_specs(layout: WorkerLayout, state, *, exact_average: bool) -> PyT
         boundary_mask=(
             None if state.boundary_mask is None else P(wentry)
         ),
+        # compression residual: worker-leading like params — each device
+        # keeps its local workers' error feedback
+        residual=wtree(state.residual),
     )
 
 

@@ -66,6 +66,16 @@ indices are stable), and the stale average — traced before the inner loop
 with no consumer until after it — is free to lower as an
 ``all-reduce-start``/``-done`` pair (docs/architecture.md §6, pinned by
 ``tests/test_overlap.py``).
+
+``compress_ratio`` configs also run unchanged: the boundary average swaps
+the dense worker all-reduce for two ``all-gather``s of the statically
+shaped magnitude top-k payload — ``(values, indices)`` per 64Ki-element
+block of each worker's boundary delta — followed by a local dense
+reconstruct + mean (``comm.MeshBackend.worker_mean_sparse``).  The
+per-worker error-feedback ``residual`` is worker-sharded like params and
+rides the same state donation; composition with ``overlap_boundary`` and
+the elastic participation mask is pinned by ``tests/test_compress.py``
+(docs/architecture.md §7).
 """
 from __future__ import annotations
 

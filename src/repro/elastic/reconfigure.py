@@ -75,6 +75,9 @@ def _map_worker_leading(cfg: SlowMoConfig, state: SlowMoState, f) -> SlowMoState
         boundary_mask=(
             f(state.boundary_mask) if state.boundary_mask is not None else None
         ),
+        # compression residual: per-worker error feedback slices like params
+        # — an evicted worker's untransmitted remainder leaves with it
+        residual=f(state.residual) if state.residual is not None else None,
     )
 
 
@@ -196,4 +199,12 @@ def admit_state(
         boundary=fresh.boundary,
         stale_outer=fresh.stale_outer,
         boundary_mask=fresh.boundary_mask,
+        # compression residual: survivors KEEP their accumulated error
+        # feedback (it is local signal, valid across membership changes);
+        # new joiners start with the fresh zero residual
+        residual=(
+            merge(state.residual, fresh.residual)
+            if fresh.residual is not None and state.residual is not None
+            else fresh.residual
+        ),
     )

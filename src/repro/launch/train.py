@@ -54,6 +54,15 @@ def main():
         "slow-momentum update applies the PREVIOUS round's average "
         "(docs/architecture.md section 6); exact-average algos only",
     )
+    ap.add_argument(
+        "--compress-ratio",
+        type=float,
+        default=None,
+        help="top-k boundary compression: average only this fraction of "
+        "each worker's boundary delta per block (error feedback carries "
+        "the remainder; docs/architecture.md section 7); 1.0 = dense-"
+        "equivalent, unset = dense all-reduce; exact-average algos only",
+    )
     ap.add_argument("--ckpt", default="")
     ap.add_argument(
         "--mesh",
@@ -166,6 +175,7 @@ def main():
         param_dtype=cfg.dtype if args.full else jnp.float32,
         packed=args.packed,
         overlap_boundary=args.overlap_boundary,
+        compress_ratio=args.compress_ratio,
     )
     tc = TrainConfig(
         total_rounds=args.rounds, per_worker_batch=args.batch, seq_len=args.seq,

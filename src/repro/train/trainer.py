@@ -4,6 +4,11 @@ The unit of work is one SlowMo *round* (tau inner steps + outer update), so
 the trainer's step counter advances by tau per iteration.  Metrics, LR
 scheduling (per outer round, matching the paper's gamma_t), periodic
 checkpointing and eval hooks live here.
+
+Boundary variants need no trainer support: ``overlap_boundary`` and
+``compress_ratio`` ride the ``SlowMoConfig`` into ``make_slowmo_round``
+and their extra state (the double buffer, the error-feedback residual)
+rides ``SlowMoState`` through the same checkpoint pack/unpack path.
 """
 from __future__ import annotations
 

@@ -1,0 +1,75 @@
+"""Every registered audit mutation must FAIL the audit (auditor self-test).
+
+``repro.analysis.audit --mutate <kind>`` seeds one deliberate contract
+violation per kind; CI spot-checks a few.  This test closes the gap for
+good: it sweeps EVERY kind in ``audit.MUTATIONS`` — each run with the
+``audit.MUTATION_FLAGS`` case flags that exercise the path it breaks
+(masked average, stale overlap, compressed boundary) — and asserts each
+one yields violations, so a newly registered mutation can never silently
+degenerate into a rubber stamp.
+
+One subprocess, all kinds in-process: the audit module forces an 8-device
+host platform before the jax import, which must not leak into this pytest
+process (conftest), and per-kind subprocesses would pay the jax start-up
+cost eight times over.
+"""
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SWEEP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from repro.analysis import audit
+
+# flags must only name registered kinds (a typo here would silently skip
+# the intended path and audit the WRONG census)
+unknown = set(audit.MUTATION_FLAGS) - set(audit.MUTATIONS)
+assert not unknown, f"MUTATION_FLAGS names unregistered mutations: {unknown}"
+
+clean_cache = {}
+for mutation in audit.MUTATIONS:
+    flags = audit.MUTATION_FLAGS.get(mutation, {})
+    case = audit.audit_case(
+        "local_sgd+slowmo", "flat", True, mutation=mutation, **flags
+    )
+    assert case is not None, f"{mutation}: case skipped (flags {flags})"
+    assert case["violations"], (
+        f"{mutation}: mutated contract PASSED the audit (flags {flags})"
+    )
+    # the same case without the mutation must be clean, or the 'failure'
+    # above proves nothing about the mutation itself
+    key = tuple(sorted(flags.items()))
+    if key not in clean_cache:
+        clean_cache[key] = audit.audit_case(
+            "local_sgd+slowmo", "flat", True, **flags
+        )
+    clean = clean_cache[key]
+    assert not clean["violations"], (
+        f"{mutation}: baseline case already fails: {clean['violations']}"
+    )
+    print(f"MUTATION-FAILS-OK {mutation}")
+"""
+
+
+def test_every_registered_mutation_fails_the_audit():
+    proc = subprocess.run(
+        [sys.executable, "-c", SWEEP_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={
+            "PYTHONPATH": os.path.join(REPO_ROOT, "src"),
+            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+            "JAX_PLATFORMS": "cpu",
+        },
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
+    # the subprocess asserts each registered kind individually; this pin
+    # catches the registry itself shrinking (importing audit here would
+    # force its 8-device platform config into the pytest process)
+    assert proc.stdout.count("MUTATION-FAILS-OK") >= 8, proc.stdout

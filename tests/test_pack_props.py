@@ -1,0 +1,133 @@
+"""Property-style tests for the ``PackSpec`` flat-buffer layout invariants.
+
+Runs via the ``tests/_hyp.py`` shim: with hypothesis installed these sweep
+random pytrees of mixed shapes/dtypes; without it they collect and skip
+cleanly.  The invariants pinned here are what the packed SlowMo state (and
+the top-k boundary compression over it) lean on:
+
+* per-group slots are DISJOINT and COVERING — contiguous in flatten order
+  from offset 0, no gaps or overlaps, so a packed buffer carries every leaf
+  element exactly once and ``unpack`` is a pure re-slicing;
+* group row counts are ``ROW_ALIGN``-multiples, minimally padded — packed
+  buffers always tile into 64-row Pallas blocks (and 64Ki-element top-k
+  compression blocks) without re-padding copies;
+* the pad region packs to ZEROS and stays zero through any zero-preserving
+  update, so pack -> update -> unpack round-trips exactly and padding never
+  contaminates leaves (or top-k payload selection, which would otherwise
+  waste k-budget on pad garbage).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hyp import given, settings, st
+
+from repro.core import packing
+from repro.core.packing import LANES, ROW_ALIGN
+
+
+#: random leaf shapes: scalars through rank-3, small dims (the invariants
+#: are about the INDEX arithmetic, not about big arrays).  Shapes stay
+#: LISTS here — the _hyp shim's stand-in strategies don't support .map()
+leaf_shapes = st.lists(
+    st.lists(st.integers(min_value=1, max_value=5), min_size=0, max_size=3),
+    min_size=1,
+    max_size=8,
+)
+leaf_dtypes = st.lists(
+    st.sampled_from(["float32", "bfloat16", "int32"]), min_size=8, max_size=8
+)
+
+
+def build_tree(shapes, dtypes, seed=0):
+    """A dict pytree with one leaf per shape, dtype cycled from ``dtypes``;
+    deterministic nonzero values so round-trip mismatches are visible."""
+    rng = np.random.default_rng(seed)
+    return {
+        f"leaf{i}": jnp.asarray(
+            rng.standard_normal(tuple(shape)) * 3 + 1,
+            jnp.dtype(dtypes[i % len(dtypes)]),
+        )
+        for i, shape in enumerate(shapes)
+    }
+
+
+class TestSlotLayout:
+    @given(shapes=leaf_shapes, dtypes=leaf_dtypes)
+    @settings(max_examples=50, deadline=None)
+    def test_slots_disjoint_and_covering(self, shapes, dtypes):
+        """Within each group, slots tile [0, sum(sizes)) contiguously in
+        flatten order: no overlap, no gap, sizes match shapes."""
+        spec = packing.make_pack_spec(build_tree(shapes, dtypes))
+        for group in spec.groups:
+            slots = [s for s in spec.slots if s.group == group]
+            assert slots, "every group owns at least one slot"
+            expect = 0
+            for slot in slots:  # spec.slots preserves flatten order
+                assert slot.size == int(np.prod(slot.shape, dtype=np.int64))
+                assert slot.offset == expect
+                expect += slot.size
+            assert expect <= spec.rows(group) * LANES
+
+    @given(shapes=leaf_shapes, dtypes=leaf_dtypes)
+    @settings(max_examples=50, deadline=None)
+    def test_rows_row_align_minimal(self, shapes, dtypes):
+        """Group rows are the MINIMAL ROW_ALIGN multiple covering the
+        group's elements — aligned for the kernel tiling, but never a
+        block more padding than that costs."""
+        spec = packing.make_pack_spec(build_tree(shapes, dtypes))
+        for group in spec.groups:
+            total = sum(s.size for s in spec.slots if s.group == group)
+            rows = spec.rows(group)
+            assert rows % ROW_ALIGN == 0
+            assert rows * LANES >= total
+            lanes_rows = -(-total // LANES)  # ceil-div
+            assert rows == -(-lanes_rows // ROW_ALIGN) * ROW_ALIGN
+
+    @given(
+        shapes=leaf_shapes,
+        dtypes=leaf_dtypes,
+        lead=st.integers(min_value=0, max_value=3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_pad_zeros_update_round_trip(self, shapes, dtypes, lead):
+        """pack -> zero-preserving update -> unpack recovers exactly the
+        leaf-wise updated tree, and the pad region is zero before AND after
+        the update (the property every in-place packed update relies on)."""
+        tree = build_tree(shapes, dtypes)
+        if lead:  # optional worker-style leading axis, broadcast copies
+            tree = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (lead,) + x.shape), tree
+            )
+        spec = packing.make_pack_spec(
+            jax.tree.map(lambda x: x[0], tree) if lead else tree
+        )
+        packed = spec.pack(tree)
+
+        def pad_mask(group):
+            m = np.zeros(spec.rows(group) * LANES, bool)
+            for s in spec.slots:
+                if s.group == group:
+                    m[s.offset : s.offset + s.size] = True
+            return ~m
+
+        for group in spec.groups:
+            flat = np.asarray(packed[group], np.float32).reshape(
+                (lead,) + (-1,) if lead else (-1,)
+            )
+            assert not flat[..., pad_mask(group)].any()
+
+        doubled = packing.Packed(
+            {g: packed[g] * jnp.asarray(2, packed[g].dtype) for g in packed}
+        )
+        out = spec.unpack(doubled)
+        want = jax.tree.map(lambda x: x * jnp.asarray(2, x.dtype), tree)
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(out[k], np.float32), np.asarray(want[k], np.float32)
+            )
+        for group in spec.groups:
+            flat = np.asarray(doubled[group], np.float32).reshape(
+                (lead,) + (-1,) if lead else (-1,)
+            )
+            assert not flat[..., pad_mask(group)].any()
