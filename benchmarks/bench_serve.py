@@ -1,0 +1,170 @@
+"""Serving-throughput benchmark: static vs continuous batching vs TP.
+
+A seeded OPEN-LOOP trace (bursty Poisson arrivals: exponential inter-burst
+gaps, geometric burst sizes, mixed short/medium/long prompts) is replayed
+against the same paged engine under three configurations:
+
+* ``static``  — batch-convoy admission (a new batch only when every slot is
+  free): the classic static-batching baseline.  Every idle slot still costs
+  a full row of the fixed-shape step, so convoying burns steps;
+* ``continuous`` — admit-on-free-slot with chunked prefill mixed into
+  decode steps (the engine's normal policy);
+* ``continuous --tp 2`` — the same continuous engine on a
+  ``make_spmd_layout(1, 2)`` mesh (2 of the 8 forced host-CPU devices):
+  model-sharded params, kv-head-sharded page pools, vocab-parallel argmax.
+
+All cases run GREEDY, so the TP case must emit token-identical output to
+the TP-free one — recorded as ``tp2_token_match`` in the summary next to
+the ``continuous_vs_static`` tokens/s ratio (the headline: > 1 because
+continuous batching backfills the slots static batching leaves idle).
+Host-CPU numbers rank policies, not hardware; per-request latency / TTFT
+percentiles come from the engine's own stamps.
+
+Results go to BENCH_serve.json (``--out``); ``--smoke`` shrinks the trace
+for CI (and writes BENCH_serve_smoke.json, which is gitignored).
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--requests 24] [--slots 4]
+"""
+import argparse
+import dataclasses
+import json
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.launch.mesh import make_spmd_layout  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve import ContinuousConfig, ContinuousEngine, Request  # noqa: E402
+
+BENCH_CFG = ModelConfig(
+    name="bench-serve-dense", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256, tie_embeddings=True,
+    act="swiglu",
+)
+
+#: prompt-length mixture: (low, high) token ranges with draw weights
+PROMPT_MIX = (((4, 8), 0.5), ((16, 32), 0.3), ((48, 64), 0.2))
+
+
+def make_trace(rng, n_requests, mean_gap_s=0.01, max_new=(6, 12)):
+    """Bursty Poisson open-loop trace: exponential gaps between bursts,
+    geometric burst sizes, prompt lengths from the PROMPT_MIX mixture."""
+    reqs, t, rid = [], 0.0, 0
+    while rid < n_requests:
+        t += float(rng.exponential(mean_gap_s))
+        for _ in range(min(1 + int(rng.geometric(0.5)), n_requests - rid)):
+            (lo, hi), = rng.choice(
+                [m for m, _ in PROMPT_MIX], 1,
+                p=[w for _, w in PROMPT_MIX],
+            )
+            P = int(rng.integers(lo, hi + 1))
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, BENCH_CFG.vocab_size, P).astype(np.int32),
+                max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+                arrival=t,
+            ))
+            rid += 1
+    return reqs
+
+
+def clone_trace(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                    arrival=r.arrival) for r in reqs]
+
+
+def run_case(label, model, params, ccfg, trace, layout=None):
+    eng = ContinuousEngine(model, params, ccfg, layout=layout)
+    eng.warmup()
+    results, stats = eng.run(clone_trace(trace))
+    rec = {"case": label, "policy": ccfg.policy, "tp": 1 if layout is None
+           else layout.model_shard}
+    rec.update({k: float(v) if isinstance(v, float) else v
+                for k, v in stats.items()})
+    print(f"  {label:<16} {stats['tokens_per_s']:8.1f} tok/s  "
+          f"p50 {stats['latency_p50'] * 1e3:7.1f} ms  "
+          f"p99 {stats['latency_p99'] * 1e3:7.1f} ms  "
+          f"ttft-p50 {stats['ttft_p50'] * 1e3:7.1f} ms")
+    return rec, results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-tp", action="store_true",
+                    help="skip the --tp 2 case (e.g. single-device runs)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 6)
+        if args.out == "BENCH_serve.json":
+            args.out = "BENCH_serve_smoke.json"
+
+    model = build_model(BENCH_CFG)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    trace = make_trace(np.random.default_rng(args.seed), args.requests)
+    base = ContinuousConfig(
+        num_slots=args.slots, chunk=args.chunk, page_size=args.page_size,
+        num_pages=args.num_pages, max_len=args.max_len, temperature=0.0,
+        seed=args.seed,
+    )
+    print(f"{args.requests} requests, {args.slots} slots, "
+          f"{sum(r.prompt_len for r in trace)} prompt tokens, "
+          f"{sum(r.max_new for r in trace)} tokens to generate")
+
+    records = []
+    rec_s, _ = run_case("static", model, params,
+                        dataclasses.replace(base, policy="static"), trace)
+    records.append(rec_s)
+    rec_c, out_c = run_case("continuous", model, params, base, trace)
+    records.append(rec_c)
+
+    tp_match = None
+    if not args.no_tp and jax.device_count() >= 2:
+        layout = make_spmd_layout(1, 2)
+        rec_tp, out_tp = run_case("continuous-tp2", model, params, base,
+                                  trace, layout=layout)
+        records.append(rec_tp)
+        tp_match = all(
+            list(out_tp[r.rid]) == list(out_c[r.rid]) for r in trace
+        )
+
+    summary = {
+        "continuous_vs_static": rec_c["tokens_per_s"] / rec_s["tokens_per_s"],
+        "tp2_token_match": tp_match,
+    }
+    print(f"summary: continuous/static tokens/s = "
+          f"{summary['continuous_vs_static']:.2f}x, "
+          f"tp2_token_match = {tp_match}")
+    payload = {
+        "config": {
+            "model": BENCH_CFG.name,
+            "requests": args.requests,
+            "num_slots": args.slots,
+            "chunk": args.chunk,
+            "page_size": args.page_size,
+            "num_pages": args.num_pages,
+            "max_len": args.max_len,
+            "seed": args.seed,
+        },
+        "records": records,
+        "summary": summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,12 +92,41 @@ def print_bench_round(path="BENCH_packed_round.json"):
         )
 
 
+def print_bench_serve(path="BENCH_serve.json"):
+    """§Serving: the continuous-batching bench's per-case throughput /
+    latency table plus the continuous-vs-static ratio and the TP greedy
+    token-match flag.  Silent no-op when the artifact is absent."""
+    if not os.path.exists(path):
+        return
+    data = json.load(open(path))
+    records = data.get("records", [])
+    summary = data.get("summary", {})
+    print(f"\n## §Serving — {path}\n")
+    if records:
+        print("| case | tok/s | latency p50/p99 (ms) | ttft p50/p99 (ms) | steps |")
+        print("|---|---|---|---|---|")
+        for r in records:
+            print(
+                f"| {r['case']} | {r['tokens_per_s']:.1f} | "
+                f"{r['latency_p50'] * 1e3:.1f} / {r['latency_p99'] * 1e3:.1f} | "
+                f"{r['ttft_p50'] * 1e3:.1f} / {r['ttft_p99'] * 1e3:.1f} | "
+                f"{r['steps']} |"
+            )
+    ratio = summary.get("continuous_vs_static")
+    if ratio is not None:
+        print(f"\n- continuous vs static batching: x{ratio:.2f} tokens/s")
+    match = summary.get("tp2_token_match")
+    if match is not None:
+        print(f"- tp2 greedy tokens identical to tp-free: {match}")
+
+
 def main():
     single_unrolled = load_dir("artifacts/dryrun_single")
     single_rolled = load_dir("artifacts/dryrun_single_rolled")
     multi = load_dir("artifacts/dryrun_multi")
     perf = load_perf()
     print_bench_round()
+    print_bench_serve()
 
     print("\n## §Roofline — generated table\n")
     print("Single-pod 16x16 mesh, per-device terms.  `src` = unrolled (roofline-"

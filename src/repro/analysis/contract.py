@@ -385,6 +385,47 @@ def round_contract(
     )
 
 
+def serve_step_contract(
+    layout,
+    *,
+    model_collective_max_bytes: int | None = None,
+    constant_threshold: int = 4096,
+) -> Contract:
+    """The collective contract of the paged SERVE step
+    (``distributed.spmd.make_paged_serve_step``).
+
+    A serve step has no workers, no batches, no boundary: every collective
+    it is allowed to issue reduces over the MODEL axes — the forward's
+    Megatron psums (embedding assembly, row-parallel outputs) plus the
+    vocab-parallel sampling pmaxes (``models.tp.vocab_parallel_argmax``).
+    There are no exact budgets (the count is body-dependent, like the
+    training loss), just one allowance — so ``rules.check_census`` flags ANY
+    collective over a non-model axis as unbudgeted, which is the audit the
+    TP serve test leans on.  TP-free layouts get an empty contract: the
+    step must issue no collectives at all."""
+    max_ = _effective_model_axes(layout)
+    tp = getattr(layout, "model_shard", 1)
+    allowances = ()
+    if tp > 1:
+        allowances = (
+            Allowance(
+                "serve-model-reductions",
+                max_,
+                ops=("all-reduce",),
+                max_bytes=model_collective_max_bytes,
+            ),
+        )
+    return Contract(
+        mesh_axes=tuple(layout.mesh.axis_names),
+        worker_axes=(),
+        batch_axes=(),
+        model_axes=max_,
+        budgets=(),
+        allowances=allowances,
+        constant_threshold=constant_threshold,
+    )
+
+
 def gossip_hop_pairs(layout, cfg) -> frozenset:
     """Every (source, target) device pair a gossip permute may use: all hop
     phases of the exponential graph over the worker axes, within each slice
@@ -415,4 +456,5 @@ __all__ = [
     "gossip_hop_pairs",
     "hlo_dtype",
     "round_contract",
+    "serve_step_contract",
 ]

@@ -444,6 +444,29 @@ def batch_shardings(layout: WorkerLayout, batch_shapes: PyTree) -> PyTree:
     )
 
 
+def serve_param_specs(layout: WorkerLayout, param_shapes: PyTree) -> PyTree:
+    """Raw PartitionSpec tree of serving parameters ENTERING ``shard_map``
+    (the continuous-batching TP serve step): no worker axis, trailing dims
+    model-sharded by the SAME ``model_spec_tail`` rules as training — the
+    shard layout the `--tp M` engine serves is the one checkpoints train."""
+    return _specs_for_tree(param_shapes, _msize(layout), prefix=())
+
+
+def serve_pool_spec(layout: WorkerLayout, pool_shape: tuple) -> P:
+    """PartitionSpec of one paged-KV page pool ``(L, num_pages + 1,
+    page_size, Hkv, hd)`` entering ``shard_map``: the kv-head dim shards
+    over the model axes (each shard's column-parallel ``wk``/``wv`` produce
+    exactly its local heads), everything else — pages, offsets — is
+    replicated bookkeeping."""
+    mentry = _mentry(layout)
+    M = _msize(layout)
+    spec = [None] * len(pool_shape)
+    hkv = pool_shape[-2]
+    if mentry is not None and hkv % M == 0 and hkv >= M:
+        spec[-2] = mentry
+    return P(*spec)
+
+
 def serve_param_shardings(layout: WorkerLayout, param_shapes: PyTree) -> PyTree:
     """Serving parameters: no worker axis, model-parallel only (replicated
     over the data axes — the serve baseline)."""

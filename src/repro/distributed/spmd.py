@@ -333,6 +333,85 @@ def make_survivor_round(
     )
 
 
+def serve_mesh_backend(layout: WorkerLayout) -> comm.MeshBackend:
+    """MeshBackend of the tensor-parallel SERVE step: no SlowMo workers —
+    the layout's worker axes (size 1 on ``make_spmd_layout(1, tp)``) only
+    satisfy the backend's axis bookkeeping; the step reaches the model-axis
+    hooks exclusively (``model_psum``/``model_pmax``/``model_index``), so
+    every collective it issues reduces over ``model`` — which is exactly
+    what ``analysis.contract.serve_step_contract`` audits."""
+    wax = layout.worker_axes or layout.data_axes
+    if not wax:
+        raise ValueError("serve layout needs at least one non-model mesh axis")
+    n_dev = int(np.prod([layout.mesh.shape[a] for a in wax]))
+    model_axes = tuple(
+        a
+        for a in layout.model_axes
+        if a in layout.mesh.axis_names and layout.mesh.shape[a] > 1
+    )
+    return comm.MeshBackend(
+        wax,
+        n_dev,
+        n_dev,
+        model_axes=model_axes,
+        model_shards=layout.model_shard,
+    )
+
+
+def make_paged_serve_step(
+    model_cfg,
+    layout: WorkerLayout,
+    params: PyTree,
+    pool_shape: tuple,
+    *,
+    prefill_self: bool,
+    temperature: float,
+):
+    """The continuous-batching serve step under ``shard_map``: sharded
+    params, kv-head-sharded page pools, replicated scheduler inputs
+    (page_table / pos / num_new / tokens / key), and vocab-parallel sampling
+    so the returned ``(B,)`` token ids are already model-complete.
+
+    Page pools are DONATED (argnums 1, 2): the step rewrites them in place
+    every call, so XLA reuses their buffers — callers must rebind, exactly
+    like the training round's donated state.  One builder call per static
+    ``prefill_self`` mode; token-buffer widths (chunk vs 1) share the
+    returned function through jit's shape cache.
+    """
+    from ..models import dense, tp as tp_mod
+
+    backend = serve_mesh_backend(layout)
+    param_specs = sharding.serve_param_specs(layout, params)
+    pool_spec = sharding.serve_pool_spec(layout, pool_shape)
+
+    def body(params, k_pages, v_pages, page_table, pos, num_new, tokens, key):
+        logits, k_pages, v_pages = dense.paged_step(
+            model_cfg,
+            params,
+            k_pages,
+            v_pages,
+            page_table,
+            pos,
+            num_new,
+            tokens,
+            backend=backend,
+            prefill_self=prefill_self,
+        )
+        sampled = tp_mod.sample_tokens(
+            backend, logits, model_cfg.vocab_size, temperature, key
+        )
+        return sampled, k_pages, v_pages
+
+    mapped = shard_map(
+        body,
+        mesh=layout.mesh,
+        in_specs=(param_specs, pool_spec, pool_spec, P(), P(), P(), P(), P()),
+        out_specs=(P(), pool_spec, pool_spec),
+        check_rep=False,
+    )
+    return jax.jit(mapped, donate_argnums=(1, 2))
+
+
 def state_shardings(cfg: SlowMoConfig, layout: WorkerLayout, state: PyTree) -> PyTree:
     """NamedSharding tree to ``jax.device_put`` a global SlowMoState onto the
     worker mesh (optional — jit would move it on first call anyway)."""

@@ -1,17 +1,93 @@
-"""Serving launcher: batched decode for any decoder architecture.
+"""Serving launcher: static batched decode or continuous batching, with TP.
+
+Static batch (any decoder architecture, the ``DecodeEngine`` path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --batch 4 --tokens 32
+
+Continuous batching (dense family, paged cache + chunked prefill):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --continuous \\
+        --requests 16 --num-slots 4 --chunk 16
+
+Tensor-parallel continuous serving (``--tp M`` builds a
+``make_spmd_layout(1, M)`` mesh; the process must see >= M devices — on a
+CPU box set ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE
+launching):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve --continuous --tp 2
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..models import build_model, param_count
-from ..serve import DecodeEngine, ServeConfig
+from ..serve import (
+    ContinuousConfig,
+    ContinuousEngine,
+    DecodeEngine,
+    Request,
+    ServeConfig,
+)
 from ..train import checkpoint
+
+
+def _run_static(args, cfg, model, params):
+    engine = DecodeEngine(
+        model, params,
+        ServeConfig(max_len=args.prompt_len + args.tokens + 1,
+                    temperature=args.temperature),
+    )
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    _, stats = engine.generate(prompts, args.tokens)
+    print(f"prefill {stats['prefill_s']*1e3:.1f} ms "
+          f"({stats['prefill_tps']:.1f} tok/s) | "
+          f"decode {stats['decode_s']*1e3:.1f} ms "
+          f"({stats['decode_tps']:.1f} tok/s) | "
+          f"end-to-end {stats['tokens_per_s']:.1f} tok/s")
+
+
+def _run_continuous(args, cfg, model, params):
+    layout = None
+    if args.tp > 1:
+        from ..launch.mesh import make_spmd_layout
+
+        if jax.device_count() < args.tp:
+            raise SystemExit(
+                f"--tp {args.tp} needs {args.tp} devices but jax sees "
+                f"{jax.device_count()}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=8 before launching"
+            )
+        layout = make_spmd_layout(1, args.tp)
+    ccfg = ContinuousConfig(
+        num_slots=args.num_slots, chunk=args.chunk, page_size=args.page_size,
+        num_pages=args.num_pages,
+        max_len=args.prompt_len + args.tokens + 1,
+        temperature=args.temperature,
+    )
+    engine = ContinuousEngine(model, params, ccfg, layout=layout)
+    engine.warmup()
+    rng = np.random.default_rng(1)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            max_new=args.tokens,
+        )
+        for i in range(args.requests)
+    ]
+    _, stats = engine.run(reqs)
+    print(f"{stats['num_requests']} requests in {stats['steps']} steps | "
+          f"{stats['tokens_per_s']:.1f} tok/s | "
+          f"latency p50 {stats['latency_p50']*1e3:.1f} ms "
+          f"p99 {stats['latency_p99']*1e3:.1f} ms | "
+          f"ttft p50 {stats['ttft_p50']*1e3:.1f} ms")
 
 
 def main():
@@ -23,6 +99,16 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--ckpt", default="", help="restore params from checkpoint")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (paged cache, dense family)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="synthetic request count (--continuous)")
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (--continuous only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)
@@ -35,16 +121,12 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
     print(f"{args.arch}: {param_count(params)/1e6:.1f}M params")
 
-    engine = DecodeEngine(
-        model, params,
-        ServeConfig(max_len=args.prompt_len + args.tokens + 1, temperature=args.temperature),
-    )
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
-    )
-    gen, stats = engine.generate(prompts, args.tokens)
-    print(f"prefill {stats['prefill_s']*1e3:.1f} ms | decode {stats['decode_s']*1e3:.1f} ms | "
-          f"{stats['tokens_per_s']:.1f} tok/s")
+    if args.continuous:
+        _run_continuous(args, cfg, model, params)
+    else:
+        if args.tp > 1:
+            raise SystemExit("--tp requires --continuous (the paged TP step)")
+        _run_static(args, cfg, model, params)
 
 
 if __name__ == "__main__":

@@ -205,6 +205,42 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None):
     return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
 
 
+def paged_attention(q, k_pages, v_pages, page_table, q_positions, *, window=None):
+    """Chunked-query attention against a paged KV cache (mixed-step path).
+
+    q: (B, C, Hq, D) — the chunk's queries; query ``c`` of slot ``b`` sits at
+    absolute position ``q_positions[b, c]``.  k_pages/v_pages:
+    (num_pages + 1, page_size, Hkv, D) pools whose page 0 is the reserved
+    null page; page_table: (B, pages_per_slot) int32.  The table is LINEAR
+    (page ``t // page_size`` holds absolute positions ``t``), so the
+    gathered view puts absolute position ``j`` at cache column ``j`` and the
+    causal mask is simply ``col <= q_position`` (± ``window``).
+
+    Unlike the flash kernel (static ``q_offset``, uniform per-batch
+    alignment) this handles PER-SLOT positions — which is exactly what a
+    mixed prefill+decode step needs; the pure-prefill (all ``pos == 0``)
+    chunks go through ``attention`` instead, where the kernel applies.
+    """
+    B, C, Hq, D = q.shape
+    pages_per_slot = page_table.shape[1]
+    page_size = k_pages.shape[1]
+    S_max = pages_per_slot * page_size
+    k = k_pages[page_table].reshape(B, S_max, -1, D)
+    v = v_pages[page_table].reshape(B, S_max, -1, D)
+    group = Hq // k.shape[2]
+    kf = _repeat_kv(k, group).astype(jnp.float32)
+    vf = _repeat_kv(v, group).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * D**-0.5, kf)
+    cols = jnp.arange(S_max)[None, None, None, :]
+    qpos = q_positions[:, None, :, None]
+    mask = cols <= qpos
+    if window is not None:
+        mask &= cols > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # attention block (projections + rope + qk-norm)
 # ---------------------------------------------------------------------------

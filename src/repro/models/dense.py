@@ -201,3 +201,94 @@ def decode_step(cfg: ModelConfig, params, cache, tokens) -> tuple[jnp.ndarray, P
     logits = x @ head.astype(x.dtype)
     new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
     return logits, new_cache
+
+
+def paged_step(
+    cfg: ModelConfig,
+    params,
+    k_pages,
+    v_pages,
+    page_table,
+    pos,
+    num_new,
+    tokens,
+    backend=tp.IDENTITY,
+    *,
+    prefill_self: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One mixed chunked-prefill + decode step against a paged KV cache.
+
+    tokens: (B, C) — per slot, the next ``num_new[b] <= C`` tokens (prompt
+    chunk for prefilling slots, the previously sampled token at column 0 for
+    decoding slots, anything for idle slots with ``num_new[b] == 0``);
+    k_pages/v_pages: (L, num_pages + 1, page_size, Hkv, hd) pools with page 0
+    reserved as the null page (``serve.cache``); page_table: (B,
+    pages_per_slot) int32; pos: (B,) tokens already cached per slot.
+
+    Every shape is static — admission, eviction and the prefill/decode mix
+    are runtime inputs (``page_table``/``pos``/``num_new``), so the engine's
+    scheduler never recompiles, mirroring how the elastic participation mask
+    is a runtime input of the training round.  Invalid token positions
+    (column >= ``num_new[b]``) scatter their KV into the null page and their
+    attention outputs are never read: the returned logits are those of each
+    slot's LAST valid token (garbage for idle slots — the host discards
+    them).
+
+    ``prefill_self=True`` is the pure-prefill fast path — only sound when
+    every slot with work has ``pos[b] == 0``, so the chunk attends only to
+    itself: attention runs as plain causal self-attention through
+    ``common.attention``, which dispatches to the Pallas flash kernel under
+    ``cfg.attention_impl == 'pallas'``.  Mixed/continuation steps use
+    ``common.paged_attention`` (per-slot positions, which the kernel's
+    static alignment cannot express).
+
+    Threads the SAME model-axis hooks as ``forward``: under a model-sharded
+    ``backend`` the params are local shards, the returned logits are
+    vocab-sharded (B, V/TP), and sampling goes through the vocab-parallel
+    primitives in ``models.tp``.
+    """
+    B, C = tokens.shape
+    page_size = k_pages.shape[2]
+    pages_per_slot = page_table.shape[1]
+    x = tp.vocab_parallel_embed(backend, params["embed"], tokens).astype(cfg.dtype)
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # (B, C)
+    valid = jnp.arange(C, dtype=jnp.int32)[None] < num_new[:, None]
+    page_idx = jnp.clip(positions // page_size, 0, pages_per_slot - 1)
+    page_ids = jnp.where(
+        valid, jnp.take_along_axis(page_table, page_idx, axis=1), 0
+    )
+    offsets = positions % page_size
+
+    def body(carry, layer):
+        x = carry
+        bp, kc, vc = layer
+        lcfg = _local_cfg(cfg, bp["attn"])
+        h = common.apply_norm(cfg, x, bp.get("ln1"))
+        h = tp.copy_to_tp(backend, h)
+        q, k, v = common.qkv_project(lcfg, bp["attn"], h, positions)
+        # valid tokens land in their mapped page; invalid ones pile up in
+        # the null page, which no gather ever unmasks
+        kc = kc.at[page_ids, offsets].set(k)
+        vc = vc.at[page_ids, offsets].set(v)
+        if prefill_self:
+            o = common.attention(lcfg, q, k, v, causal=True, window=cfg.window)
+        else:
+            o = common.paged_attention(
+                q, kc, vc, page_table, positions, window=cfg.window
+            )
+        x = x + tp.reduce_from_tp(backend, common.attn_out(lcfg, bp["attn"], o))
+        h = common.apply_norm(cfg, x, bp.get("ln2"))
+        h = tp.copy_to_tp(backend, h)
+        x = x + tp.reduce_from_tp(backend, common.mlp(cfg, bp["mlp"], h))
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], k_pages, v_pages), unroll=cfg.unroll_layers
+    )
+    x = common.apply_norm(cfg, x, params.get("final_norm"))
+    last = jnp.clip(num_new - 1, 0, C - 1)
+    x = x[jnp.arange(B), last]  # (B, d): each slot's last valid hidden
+    x = tp.copy_to_tp(backend, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, k_new, v_new

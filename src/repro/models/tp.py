@@ -190,6 +190,55 @@ def vocab_parallel_xent(backend, logits, labels, vocab_size, mask=None):
 
 
 # ---------------------------------------------------------------------------
+# vocab-parallel sampling (the serving-side counterpart of the CE above)
+# ---------------------------------------------------------------------------
+
+def vocab_parallel_argmax(backend, logits):
+    """Global argmax over vocab-sharded ``(…, V/TP)`` logits, ties broken to
+    the LOWEST global index — exactly ``jnp.argmax`` on the full vocab, so a
+    TP engine's greedy decode is token-identical to the TP-free one.
+
+    Two model-axis reductions: a pmax for the global max, then a pmin
+    (``-pmax(-x)``) over each shard's candidate global index — shards not
+    holding the max contribute ``+inf``.  Candidates ride in f32 (exact for
+    every vocab < 2^24).  TP-free backends short-circuit to plain argmax.
+    """
+    if backend.model_shards == 1:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32)
+    v_local = lf.shape[-1]
+    local_max = jnp.max(lf, axis=-1)
+    local_idx = jnp.argmax(lf, axis=-1) + backend.model_index() * v_local
+    gmax = backend.model_pmax(local_max)
+    cand = jnp.where(local_max >= gmax, local_idx.astype(jnp.float32), jnp.inf)
+    return (-backend.model_pmax(-cand)).astype(jnp.int32)
+
+
+def sample_tokens(backend, logits, vocab_size, temperature, key):
+    """Greedy (``temperature <= 0``) or categorical sampling over possibly
+    vocab-sharded ``(B, V_local)`` logits -> (B,) int32 token ids.
+
+    Categorical sampling is Gumbel-max: EVERY shard draws the FULL-vocab
+    gumbel field from the same key, slices its own window at
+    ``model_index() * V_local``, and the perturbed argmax goes through
+    ``vocab_parallel_argmax``.  The TP-free path runs the identical
+    construction on the unsliced field, so for the same key the TP and
+    TP-free engines sample the SAME token — the property
+    ``jax.random.categorical`` (whose gumbel draw would differ per shard
+    shape) could not give us.
+    """
+    if temperature <= 0.0:
+        return vocab_parallel_argmax(backend, logits)
+    lf = logits.astype(jnp.float32) / temperature
+    B, v_local = lf.shape
+    g = jax.random.gumbel(key, (B, vocab_size), jnp.float32)
+    if backend.model_shards > 1:
+        lo = backend.model_index() * v_local
+        g = jax.lax.dynamic_slice(g, (0, lo), (B, v_local))
+    return vocab_parallel_argmax(backend, lf + g)
+
+
+# ---------------------------------------------------------------------------
 # wiring: the dense pipeline as a backend-bindable loss
 # ---------------------------------------------------------------------------
 

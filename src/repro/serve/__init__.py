@@ -1,1 +1,18 @@
-from .engine import DecodeEngine, ServeConfig
+from .cache import NULL_PAGE, PageAllocator, init_pools, pages_needed, pool_shape
+from .engine import ContinuousConfig, ContinuousEngine, DecodeEngine, ServeConfig
+from .scheduler import Request, Scheduler, StepPlan
+
+__all__ = [
+    "NULL_PAGE",
+    "PageAllocator",
+    "init_pools",
+    "pages_needed",
+    "pool_shape",
+    "ContinuousConfig",
+    "ContinuousEngine",
+    "DecodeEngine",
+    "ServeConfig",
+    "Request",
+    "Scheduler",
+    "StepPlan",
+]

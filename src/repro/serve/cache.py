@@ -1,0 +1,120 @@
+"""Slotted paged KV cache: the state layout of the continuous-batching engine.
+
+The cache is a pair of page POOLS per layer — ``(L, num_pages + 1,
+page_size, Hkv, hd)`` arrays — plus two small host-side maps the scheduler
+owns:
+
+* ``page_table`` ``(num_slots, pages_per_slot)`` int32 — page ``t //
+  page_size`` of slot ``b`` holds the KV of the slot's absolute token
+  positions ``[p * page_size, (p+1) * page_size)``.  The table is LINEAR:
+  gathered cache position ``j`` is absolute position ``j``, so the causal
+  mask of ``common.paged_attention`` is just ``col <= q_position``.
+* ``pos`` ``(num_slots,)`` int32 — tokens currently cached per slot.
+
+Page 0 is the NULL page: it is never handed out by the allocator, unmapped
+table entries point at it, and the mixed step scatters every INVALID token's
+KV there (``models.dense.paged_step`` routes positions past ``num_new``).
+Stale or empty table rows therefore cannot corrupt a page another slot
+reuses — garbage has a dedicated landing zone that no gather ever unmasks.
+
+Admit/evict is pure host-side bookkeeping on ``page_table``/``pos`` (both
+runtime inputs of the compiled step, like the elastic participation mask of
+the training round), so membership changes never recompile.  Pages are
+allocated on demand as a slot's ``pos`` crosses page boundaries and returned
+on evict; the free list is LIFO, so freed pages are immediately reused —
+``tests/test_serve.py`` property-tests disjointness, exact coverage and
+reuse, and pins that evict-then-admit leaves other slots' logits
+bit-identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+#: page id every unmapped page-table entry (and invalid-token scatter) uses
+NULL_PAGE = 0
+
+
+def pool_shape(cfg: ModelConfig, num_pages: int, page_size: int) -> tuple:
+    """Shape of one KV page pool (the +1 is the reserved null page)."""
+    return (
+        cfg.n_layers,
+        num_pages + 1,
+        page_size,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+    )
+
+
+def init_pools(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Zero-initialized ``(k_pages, v_pages)`` pools in the compute dtype."""
+    shape = pool_shape(cfg, num_pages, page_size)
+    return jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype)
+
+
+def pages_needed(num_tokens: int, page_size: int) -> int:
+    """Pages covering ``num_tokens`` cached tokens."""
+    return -(-num_tokens // page_size)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over page ids ``1..num_pages``.
+
+    ``reserve``/``release_reservation`` implement admission control: the
+    scheduler reserves a request's worst-case page count at admit time so
+    demand paging can never deadlock mid-flight, then draws pages out of the
+    reservation as the slot actually crosses page boundaries.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"need at least one page, got {num_pages}")
+        self.num_pages = num_pages
+        # LIFO free list: freed pages are reused first (the property tests
+        # lean on this — reuse is the interesting case)
+        self._free = list(range(num_pages, 0, -1))
+        self._reserved = 0
+
+    @property
+    def available(self) -> int:
+        """Pages neither allocated nor spoken for by a reservation."""
+        return len(self._free) - self._reserved
+
+    def can_reserve(self, n: int) -> bool:
+        return self.available >= n
+
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"cannot reserve {n} pages: {self.available} available "
+                f"of {self.num_pages}"
+            )
+        self._reserved += n
+
+    def release_reservation(self, n: int) -> None:
+        if n > self._reserved:
+            raise ValueError(f"releasing {n} of {self._reserved} reserved pages")
+        self._reserved -= n
+
+    def allocate(self, n: int, *, from_reservation: bool = True) -> list[int]:
+        """Pop ``n`` page ids (never the null page)."""
+        if n > len(self._free):
+            raise ValueError(
+                f"page pool exhausted: need {n}, have {len(self._free)} free"
+            )
+        if from_reservation:
+            if n > self._reserved:
+                raise ValueError(
+                    f"allocating {n} unreserved pages ({self._reserved} reserved)"
+                )
+            self._reserved -= n
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not (1 <= p <= self.num_pages):
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)

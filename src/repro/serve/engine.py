@@ -1,9 +1,33 @@
-"""Batched decode serving engine.
+"""Serving engines: static-batch decode and continuous batching.
 
-Drives ``decode_step`` for a batch of requests with a shared ring/linear
-cache: prefill by stepping the prompt tokens, then greedy/temperature
-sampling for the generation phase.  This is the substrate exercised by the
-``decode_32k`` / ``long_500k`` dry-run shapes (there, with ShapeDtypeStructs).
+``DecodeEngine`` is the simple substrate: one batch, a shared ring/linear
+cache, prefill then decode, everyone finishes together.  It doubles as the
+per-request ORACLE of the continuous engine's tests (run each request alone
+at batch 1 and the tokens must match exactly).
+
+``ContinuousEngine`` is the production-shaped path: a slotted PAGED kv cache
+(``serve.cache``), a request queue with arrival times (``serve.scheduler``),
+and ONE compiled step whose shapes never change — batch is always
+``num_slots`` rows, the page table always ``(num_slots, pages_per_slot)``,
+the token buffer one of two widths (``chunk`` during prefill, 1 once every
+active slot is decoding).  Admission, eviction and the prefill/decode mix
+are RUNTIME inputs (``page_table`` / ``pos`` / ``num_new``), so requests
+join and leave mid-flight with zero recompiles — the serving twin of the
+training round's elastic participation mask.
+
+Exactly three step variants are warm-compiled:
+
+* ``(chunk, prefill_self=True)`` — every active slot at ``pos == 0``; plain
+  causal self-attention, which dispatches to the Pallas flash kernel under
+  ``attention_impl='pallas'`` (this is where flash prefill plugs in);
+* ``(chunk, mixed)`` — chunked prefill continuation and/or decode riders,
+  through the paged gather attention;
+* ``(1, mixed)`` — pure decode.
+
+With a TP ``WorkerLayout`` the SAME step runs under ``shard_map``
+(``distributed.spmd.make_paged_serve_step``): model-sharded params,
+kv-head-sharded pools, and vocab-parallel sampling (``models.tp``), so the
+``--tp M`` engine emits token-identical output to the TP-free one.
 """
 from __future__ import annotations
 
@@ -13,8 +37,11 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.api import ModelBundle
+from . import cache as cache_lib
+from .scheduler import Request, Scheduler
 
 PyTree = Any
 
@@ -42,6 +69,17 @@ class DecodeEngine:
         key: Optional[jax.Array] = None,
     ) -> tuple[jnp.ndarray, dict]:
         B, P = prompts.shape
+        # non-window caches are LINEAR: decode_step clamps its write slot to
+        # the last cache row, so running past max_len would silently
+        # overwrite that row's kv and corrupt every later logit — reject
+        # eagerly instead.  Window models ring-index by design and can
+        # generate indefinitely.
+        if not self.model.config.window and P + num_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"prompt ({P}) + num_tokens ({num_tokens}) exceeds the "
+                f"linear cache's max_len ({self.cfg.max_len}); raise max_len "
+                f"or generate fewer tokens"
+            )
         cache = self.model.init_cache(B, self.cfg.max_len)
         # `key or ...` would call bool() on a shape-(2,) key array and raise
         if key is None:
@@ -52,10 +90,13 @@ class DecodeEngine:
         logits = None
         for t in range(P):
             logits, cache = self._step(self.params, cache, prompts[:, t : t + 1])
-        t_prefill = time.perf_counter() - t0
-
         out = []
         tok = self._sample(logits, key, 0)
+        # the first generated token's compute happened in prefill — block on
+        # it BEFORE stamping, or prefill_s undercounts (dispatch is async)
+        # and the decode phase inherits the first token's latency
+        tok.block_until_ready()
+        t_prefill = time.perf_counter() - t0
         out.append(tok)
         for i in range(1, num_tokens):
             logits, cache = self._step(self.params, cache, tok)
@@ -64,10 +105,16 @@ class DecodeEngine:
         gen = jnp.concatenate(out, axis=1)
         gen.block_until_ready()
         t_total = time.perf_counter() - t0
+        decode_s = t_total - t_prefill
         stats = {
             "prefill_s": t_prefill,
-            "decode_s": t_total - t_prefill,
-            "tokens_per_s": B * num_tokens / max(t_total - t_prefill, 1e-9),
+            "decode_s": decode_s,
+            # prefill processed B*P prompt tokens (and produced the first
+            # generated token); decode produced the remaining num_tokens-1
+            "prefill_tps": B * P / max(t_prefill, 1e-9),
+            "decode_tps": B * (num_tokens - 1) / max(decode_s, 1e-9),
+            # end-to-end: generated tokens over the whole wall clock
+            "tokens_per_s": B * num_tokens / max(t_total, 1e-9),
         }
         return gen, stats
 
@@ -77,3 +124,198 @@ class DecodeEngine:
             return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(k, last / self.cfg.temperature)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuousConfig:
+    num_slots: int = 4
+    chunk: int = 16  # prefill tokens per slot per step
+    page_size: int = 16
+    num_pages: int = 128  # shared pool (page 0, the null page, is extra)
+    max_len: int = 256  # per-slot capacity: prompt + generated - 1 tokens
+    temperature: float = 0.0
+    seed: int = 0
+    policy: str = "continuous"  # or "static" (batch-convoy baseline)
+
+
+class ContinuousEngine:
+    """Continuous-batching serve loop over the paged step.
+
+    ``layout=None`` (or a layout without model shards) runs single-device
+    with the identity TP hooks; a TP layout runs the shard-mapped step on
+    the layout's mesh.  Either way the tokens are identical — pinned by
+    ``tests/test_serve.py``.
+    """
+
+    def __init__(
+        self,
+        model: ModelBundle,
+        params: PyTree,
+        cfg: ContinuousConfig,
+        layout=None,
+    ):
+        mcfg = model.config
+        if mcfg.family != "dense":
+            raise ValueError(
+                f"the paged continuous engine serves the dense family only "
+                f"(got {mcfg.family!r}); other families serve via DecodeEngine"
+            )
+        self.model = model
+        self.cfg = cfg
+        self.pages_per_slot = cache_lib.pages_needed(cfg.max_len, cfg.page_size)
+        self.pool_shape = cache_lib.pool_shape(mcfg, cfg.num_pages, cfg.page_size)
+        self.layout = layout if (layout is not None and layout.model_shard > 1) else None
+        if self.layout is not None:
+            tp = self.layout.model_shard
+            bad = {
+                "n_heads": mcfg.n_heads,
+                "n_kv_heads": mcfg.n_kv_heads,
+                "d_ff": mcfg.d_ff,
+                "vocab_size": mcfg.vocab_size,
+            }
+            offenders = {k: v for k, v in bad.items() if v % tp}
+            if offenders:
+                raise ValueError(
+                    f"TP serve needs {list(bad)} divisible by the {tp}-way "
+                    f"model axes; offending: {offenders}"
+                )
+            from ..distributed import spmd
+
+            self.params = params
+            self._step_self = spmd.make_paged_serve_step(
+                mcfg, self.layout, params, self.pool_shape,
+                prefill_self=True, temperature=cfg.temperature,
+            )
+            self._step_mixed = spmd.make_paged_serve_step(
+                mcfg, self.layout, params, self.pool_shape,
+                prefill_self=False, temperature=cfg.temperature,
+            )
+        else:
+            self.params = params
+            self._step_self = self._build_local_step(prefill_self=True)
+            self._step_mixed = self._build_local_step(prefill_self=False)
+
+    def _build_local_step(self, *, prefill_self: bool):
+        from ..models import dense, tp as tp_mod
+
+        mcfg = self.model.config
+        temperature = self.cfg.temperature
+
+        def step(params, k_pages, v_pages, page_table, pos, num_new, tokens, key):
+            logits, k_pages, v_pages = dense.paged_step(
+                mcfg, params, k_pages, v_pages, page_table, pos, num_new,
+                tokens, prefill_self=prefill_self,
+            )
+            sampled = tp_mod.sample_tokens(
+                tp_mod.IDENTITY, logits, mcfg.vocab_size, temperature, key
+            )
+            return sampled, k_pages, v_pages
+
+        return jax.jit(step, donate_argnums=(1, 2))
+
+    def _init_pools(self):
+        k_pages, v_pages = cache_lib.init_pools(
+            self.model.config, self.cfg.num_pages, self.cfg.page_size
+        )
+        if self.layout is not None:
+            from jax.sharding import NamedSharding
+
+            from ..distributed import sharding as sharding_lib
+
+            ns = NamedSharding(
+                self.layout.mesh,
+                sharding_lib.serve_pool_spec(self.layout, self.pool_shape),
+            )
+            k_pages = jax.device_put(k_pages, ns)
+            v_pages = jax.device_put(v_pages, ns)
+        return k_pages, v_pages
+
+    def warmup(self):
+        """Compile all three (width, mode) step variants off the hot path."""
+        cfg = self.cfg
+        zeros = lambda width: (  # noqa: E731
+            jnp.zeros((cfg.num_slots, self.pages_per_slot), jnp.int32),
+            jnp.zeros(cfg.num_slots, jnp.int32),
+            jnp.zeros(cfg.num_slots, jnp.int32),
+            jnp.zeros((cfg.num_slots, width), jnp.int32),
+            jax.random.PRNGKey(cfg.seed),
+        )
+        for fn, width in (
+            (self._step_self, cfg.chunk),
+            (self._step_mixed, cfg.chunk),
+            (self._step_mixed, 1),
+        ):
+            k_pages, v_pages = self._init_pools()  # fresh: fns donate pools
+            out = fn(self.params, k_pages, v_pages, *zeros(width))
+            jax.block_until_ready(out)
+
+    def run(self, requests, key: Optional[jax.Array] = None):
+        """Serve an open-loop trace of ``scheduler.Request``s to completion.
+
+        Returns ``(results, stats)``: ``results`` maps rid -> (max_new,)
+        int32 generated tokens; ``stats`` has engine throughput plus
+        per-request latency/TTFT percentiles (requests also carry their own
+        ``admitted_at``/``first_token_at``/``done_at`` stamps).
+        """
+        cfg = self.cfg
+        sched = Scheduler(
+            num_slots=cfg.num_slots,
+            chunk=cfg.chunk,
+            page_size=cfg.page_size,
+            num_pages=cfg.num_pages,
+            max_len=cfg.max_len,
+            policy=cfg.policy,
+        )
+        requests = list(requests)
+        sched.submit(requests)
+        if key is None:
+            key = jax.random.PRNGKey(cfg.seed)
+        k_pages, v_pages = self._init_pools()
+        steps = 0
+        t0 = time.perf_counter()
+        while not sched.done():
+            now = time.perf_counter() - t0
+            sched.admit(now)
+            plan = sched.plan()
+            if plan is None:
+                nxt = sched.next_arrival()
+                if nxt is None:  # pragma: no cover - done() guards this
+                    break
+                time.sleep(max(nxt - (time.perf_counter() - t0), 0.0) + 1e-4)
+                continue
+            fn = self._step_self if plan.prefill_self else self._step_mixed
+            sampled, k_pages, v_pages = fn(
+                self.params,
+                k_pages,
+                v_pages,
+                jnp.asarray(plan.page_table),
+                jnp.asarray(plan.pos),
+                jnp.asarray(plan.num_new),
+                jnp.asarray(plan.tokens),
+                jax.random.fold_in(key, steps),
+            )
+            # np.asarray blocks: the sampled ids feed the next plan anyway
+            sched.commit(np.asarray(sampled), time.perf_counter() - t0)
+            steps += 1
+        total_s = time.perf_counter() - t0
+        results = {r.rid: np.array(r.generated, np.int32) for r in requests}
+        gen_tokens = sum(len(r.generated) for r in requests)
+        latency = np.array([r.done_at - r.arrival for r in requests])
+        ttft = np.array([r.first_token_at - r.arrival for r in requests])
+        stats = {
+            "total_s": total_s,
+            "steps": steps,
+            "num_requests": len(requests),
+            "generated_tokens": gen_tokens,
+            "tokens_per_s": gen_tokens / max(total_s, 1e-9),
+            "latency_p50": float(np.percentile(latency, 50)),
+            "latency_p99": float(np.percentile(latency, 99)),
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p99": float(np.percentile(ttft, 99)),
+        }
+        return results, stats

@@ -1,0 +1,257 @@
+"""Request queue + slot scheduler of the continuous-batching engine.
+
+The scheduler owns every piece of host-side serving state: the FIFO arrival
+queue, the slot -> request assignment, each slot's prompt progress, and the
+paged-cache maps (``page_table`` / ``pos`` — runtime inputs of the compiled
+step, so none of this ever recompiles anything).  The engine drives it in a
+strict loop: ``admit(now)`` -> ``plan()`` -> run the compiled step ->
+``commit(sampled, now)``.
+
+Admission policies:
+
+* ``continuous`` — admit-on-free-slot: whenever a slot is free, the oldest
+  arrived request whose worst-case pages can be reserved takes it, mid-
+  flight.  Head-of-line order is FIFO (a request that cannot reserve blocks
+  later ones, preserving fairness).
+* ``static`` — the classic static-batching baseline the benchmark compares
+  against: a new batch is admitted ONLY when every slot is free, so the
+  whole batch convoys on its slowest member.  Same engine, same kernels —
+  the admission rule is the only variable.
+
+Step planning mixes phases in ONE step: prefilling slots take their next
+``<= chunk`` prompt tokens, decoding slots ride along with their previously
+sampled token in column 0, idle slots get ``num_new == 0``.  When no slot
+has prompt tokens left the token buffer drops to width 1 (the second of the
+two warm-compiled widths).  ``prefill_self`` is flagged when every active
+slot is at ``pos == 0`` — the pure-prefill mode where the step may run plain
+causal self-attention (and the Pallas flash kernel) instead of the paged
+gather.
+
+Pages are demand-allocated at plan time as a slot's ``pos`` crosses page
+boundaries, against the worst-case reservation taken at admit
+(``cache.PageAllocator``), and freed at completion — eviction is a row wipe
+of ``page_table``/``pos`` plus a free-list push.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from .cache import NULL_PAGE, PageAllocator, pages_needed
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its lifecycle record.
+
+    ``arrival`` is in seconds relative to the engine run's start (open-loop
+    trace time); the scheduler stamps ``admitted_at`` / ``first_token_at`` /
+    ``done_at`` on the same clock and appends generated ids to
+    ``generated``.
+    """
+
+    rid: int
+    prompt: np.ndarray  # (P,) int32 prompt token ids
+    max_new: int
+    arrival: float = 0.0
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[0])
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Device inputs of one compiled step (all shapes static per width)."""
+
+    width: int
+    prefill_self: bool
+    tokens: np.ndarray  # (num_slots, width) int32
+    num_new: np.ndarray  # (num_slots,) int32
+    pos: np.ndarray  # (num_slots,) int32
+    page_table: np.ndarray  # (num_slots, pages_per_slot) int32
+    finishes_prefill: np.ndarray  # (num_slots,) bool — sampled id is token 1
+
+
+class Scheduler:
+    def __init__(
+        self,
+        num_slots: int,
+        chunk: int,
+        page_size: int,
+        num_pages: int,
+        max_len: int,
+        policy: str = "continuous",
+    ):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        if chunk < 1:
+            raise ValueError(f"chunk width must be >= 1, got {chunk}")
+        self.num_slots = num_slots
+        self.chunk = chunk
+        self.page_size = page_size
+        self.max_len = max_len
+        self.policy = policy
+        self.pages_per_slot = pages_needed(max_len, page_size)
+        self.allocator = PageAllocator(num_pages)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self._consumed = [0] * num_slots
+        self._pages: list[list[int]] = [[] for _ in range(num_slots)]
+        self._reserved = [0] * num_slots
+        self.pos = np.zeros(num_slots, np.int32)
+        self.page_table = np.full(
+            (num_slots, self.pages_per_slot), NULL_PAGE, np.int32
+        )
+        self._plan: Optional[StepPlan] = None
+
+    # -- submission / admission --------------------------------------------
+    def submit(self, requests) -> None:
+        """Queue requests (sorted by arrival, FIFO within ties).
+
+        Eagerly rejects any request the cache could never hold: the engine's
+        per-slot capacity is ``max_len`` tokens, and a request caches up to
+        ``P + max_new - 1`` of them (the final sampled token is returned,
+        never fed back) — the paged twin of the ``DecodeEngine`` overflow
+        guard."""
+        reqs = list(requests)
+        for r in reqs:
+            if r.prompt_len < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+            if r.max_new < 1:
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            if r.prompt_len + r.max_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt ({r.prompt_len}) + max_new "
+                    f"({r.max_new}) exceeds the engine's max_len "
+                    f"({self.max_len}) — the paged cache would overflow"
+                )
+        self.queue.extend(sorted(reqs, key=lambda r: r.arrival))
+
+    def _free_slots(self) -> list[int]:
+        return [b for b, r in enumerate(self.slots) if r is None]
+
+    def _admit_one(self, slot: int, req: Request, now: float) -> bool:
+        # worst-case cached tokens: the whole prompt plus every generated
+        # token except the last (which is never fed back)
+        need = pages_needed(req.prompt_len + req.max_new - 1, self.page_size)
+        if not self.allocator.can_reserve(need):
+            return False
+        self.allocator.reserve(need)
+        self._reserved[slot] = need
+        self.slots[slot] = req
+        self._consumed[slot] = 0
+        self.pos[slot] = 0
+        req.admitted_at = now
+        return True
+
+    def admit(self, now: float) -> int:
+        """Move arrived requests into free slots; returns how many."""
+        admitted = 0
+        if self.policy == "static" and any(r is not None for r in self.slots):
+            return 0
+        for slot in self._free_slots():
+            if not self.queue or self.queue[0].arrival > now:
+                break
+            if not self._admit_one(slot, self.queue[0], now):
+                break  # FIFO head-of-line: wait for pages, don't skip ahead
+            self.queue.popleft()
+            admitted += 1
+        return admitted
+
+    # -- step planning / commit --------------------------------------------
+    def _ensure_pages(self, slot: int, total_tokens: int) -> None:
+        need = pages_needed(total_tokens, self.page_size) - len(self._pages[slot])
+        if need <= 0:
+            return
+        pages = self.allocator.allocate(need)
+        self._reserved[slot] -= need
+        start = len(self._pages[slot])
+        self._pages[slot].extend(pages)
+        self.page_table[slot, start : start + len(pages)] = pages
+
+    def plan(self) -> Optional[StepPlan]:
+        """Build the next step's inputs; None when no slot is active."""
+        active = [(b, r) for b, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return None
+        any_prefill = any(
+            self._consumed[b] < r.prompt_len for b, r in active
+        )
+        width = self.chunk if any_prefill else 1
+        prefill_self = all(self.pos[b] == 0 for b, _ in active)
+        tokens = np.zeros((self.num_slots, width), np.int32)
+        num_new = np.zeros(self.num_slots, np.int32)
+        finishes = np.zeros(self.num_slots, bool)
+        for b, r in active:
+            consumed = self._consumed[b]
+            if consumed < r.prompt_len:
+                n = min(width, r.prompt_len - consumed)
+                tokens[b, :n] = np.asarray(r.prompt[consumed : consumed + n])
+                finishes[b] = consumed + n == r.prompt_len
+            else:
+                n = 1
+                tokens[b, 0] = r.generated[-1]
+            num_new[b] = n
+            self._ensure_pages(b, int(self.pos[b]) + n)
+        self._plan = StepPlan(
+            width=width,
+            prefill_self=prefill_self,
+            tokens=tokens,
+            num_new=num_new,
+            pos=self.pos.copy(),
+            page_table=self.page_table.copy(),
+            finishes_prefill=finishes,
+        )
+        return self._plan
+
+    def _evict(self, slot: int) -> None:
+        self.allocator.free(self._pages[slot])
+        self._pages[slot] = []
+        self.allocator.release_reservation(self._reserved[slot])
+        self._reserved[slot] = 0
+        self.slots[slot] = None
+        self._consumed[slot] = 0
+        self.pos[slot] = 0
+        self.page_table[slot, :] = NULL_PAGE
+
+    def commit(self, sampled: np.ndarray, now: float) -> list[Request]:
+        """Apply the last plan's outcome; returns requests completed now."""
+        plan = self._plan
+        if plan is None:
+            raise RuntimeError("commit() without a preceding plan()")
+        self._plan = None
+        completed = []
+        for b, r in enumerate(self.slots):
+            if r is None or plan.num_new[b] == 0:
+                continue
+            n = int(plan.num_new[b])
+            self.pos[b] += n
+            if self._consumed[b] < r.prompt_len:
+                self._consumed[b] += n
+                if plan.finishes_prefill[b]:
+                    # the chunk that consumed the final prompt token also
+                    # produced the first generated token
+                    r.first_token_at = now
+                    r.generated.append(int(sampled[b]))
+            else:
+                r.generated.append(int(sampled[b]))
+            if len(r.generated) == r.max_new:
+                r.done_at = now
+                completed.append(r)
+                self._evict(b)
+        return completed
+
+    # -- loop bookkeeping ---------------------------------------------------
+    def done(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)
+
+    def next_arrival(self) -> Optional[float]:
+        return min((r.arrival for r in self.queue), default=None)
